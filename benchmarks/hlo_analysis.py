@@ -1,0 +1,268 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, so a
+model built on ``lax.scan`` (layers, microbatches, attention KV blocks, SSD
+chunks) under-reports FLOPs/bytes/collectives by the product of trip counts.
+This module re-derives costs from the post-optimization HLO text:
+
+  1. split the module into computations,
+  2. find every `while` op, link its condition/body computations, and read
+     the static trip count out of the condition's `compare(iv, constant(N))`
+     (falling back to known config trip counts when the pattern is dynamic),
+  3. propagate multipliers through the call graph (nested scans multiply),
+  4. per computation, accumulate
+       * dot/convolution FLOPs from shapes + dot_dimension_numbers
+         (matmul-dominated models: elementwise flops are ignored, which
+         under-counts by <2% on these architectures),
+       * result-buffer bytes of every op (x2 as a read+write bandwidth
+         proxy; documented accuracy +-2x, used for the memory term),
+       * collective wire bytes with ring-cost factors.
+
+The result is the per-device cost of one full step, derived entirely from
+the compiled artifact.
+"""
+from __future__ import annotations
+
+import gzip
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:%(\S+)|(\S+))\s*\(.*\)\s*->.*\{\s*$")
+_ENTRY_RE = re.compile(r"^ENTRY\s+(?:%)?(\S+?)\s*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=(?:%)?([\w.\-]+).*?body=(?:%)?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls)=(?:%)?([\w.\-]+)")
+_FUSION_RE = re.compile(r"fusion\(.*?\).*?calls=(?:%)?([\w.\-]+)")
+_CONST_CMP = re.compile(r"constant\((\d+)\)")
+_DOT_RE = re.compile(r"\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]+)\}")
+_LHS_SHAPE_RE = re.compile(r"dot\((?:%)?[\w.\-]+\s*,")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _parse_shape(text: str) -> Tuple[int, int]:
+    """(total bytes, elem count) of the FIRST shape literal in text."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0, 0
+    dt, dims = m.groups()
+    n = int(np.prod([int(x) for x in dims.split(",") if x] or [1]))
+    return _DTYPE_BYTES.get(dt, 4) * n, n
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?(?:%)?([\w.\-]+)\s*\(.*\)\s*->.*{", ls)
+            if m and ("->" in ls):
+                cur = m.group(2)
+                comps[cur] = []
+                depth = 1
+                continue
+        else:
+            depth += ls.count("{") - ls.count("}")
+            if depth <= 0:
+                cur = None
+                continue
+            comps[cur].append(ls)
+    return comps
+
+
+def find_entry(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+(?:%)?([\w.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Static trip bound from the condition computation.
+
+    Matches `compare(iv, constant(N)) direction=LT` shapes; returns N.
+    """
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"(?:%)?([\w.\-]+)\s*=\s*\S+\s+constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" not in ln:
+            continue
+        m = re.search(r"compare\((?:%)?([\w.\-]+),\s*(?:%)?([\w.\-]+)\)", ln)
+        dirm = re.search(r"direction=(\w+)", ln)
+        if not m:
+            continue
+        a, b = m.groups()
+        d = dirm.group(1) if dirm else "LT"
+        if b in consts and d == "LT":
+            return consts[b]
+        if a in consts and d == "GT":
+            return consts[a]
+        inline = _CONST_CMP.search(ln)
+        if inline:
+            return int(inline.group(1))
+    return None
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_ARGS = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\)")
+_RHS_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]+)\}")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _build_symtab(lines: List[str]) -> Dict[str, List[int]]:
+    """opname -> result dims for every op defined in a computation."""
+    sym: Dict[str, List[int]] = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            name, _, dims = m.groups()
+            sym[name] = [int(x) for x in dims.split(",") if x]
+    return sym
+
+
+def _dot_flops(line: str, sym: Dict[str, List[int]]) -> float:
+    """2 * prod(result dims) * prod(contracted dims)."""
+    first = _SHAPE_RE.search(line)       # result shape is leftmost
+    if not first:
+        return 0.0
+    res_dims = [int(x) for x in first.group(2).split(",") if x]
+    contracted = 1
+    args = _DOT_ARGS.search(line)
+    lhs_c = _CONTRACT_RE.search(line)
+    rhs_c = _RHS_CONTRACT_RE.search(line)
+    if args:
+        lhs, rhs = args.groups()
+        if lhs_c and lhs in sym:
+            for idx in (int(i) for i in lhs_c.group(1).split(",") if i):
+                if idx < len(sym[lhs]):
+                    contracted *= sym[lhs][idx]
+        elif rhs_c and rhs in sym:
+            for idx in (int(i) for i in rhs_c.group(1).split(",") if i):
+                if idx < len(sym[rhs]):
+                    contracted *= sym[rhs][idx]
+    return 2.0 * float(np.prod(res_dims or [1])) * contracted
+
+
+def _collective_wire(line: str, op: str) -> float:
+    nbytes, _ = _parse_shape(line)
+    n = 1
+    g = _GROUP_RE.search(line)
+    if g:
+        n = max(len(g.group(1).split(",")), 1)
+    else:
+        g2 = _GROUP_V2.search(line)
+        if g2:
+            n = int(g2.group(2))
+    if n <= 1:
+        return 0.0
+    ring = (n - 1) / n
+    if op == "all-gather":
+        return nbytes * ring
+    if op == "reduce-scatter":
+        return nbytes * (n - 1)
+    if op == "all-reduce":
+        return 2 * nbytes * ring
+    if op == "all-to-all":
+        return nbytes * ring
+    return float(nbytes)        # collective-permute
+
+
+def analyze_hlo(hlo: str, known_trips: Optional[Dict[str, int]] = None
+                ) -> Dict[str, float]:
+    """Trip-count-corrected per-device costs of the whole module."""
+    comps = split_computations(hlo)
+    entry = find_entry(hlo)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+
+    # per-computation local costs + call edges
+    local = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        sym = _build_symtab(lines)
+        fl = by = co = 0.0
+        ed: List[Tuple[str, float]] = []
+        for ln in lines:
+            # zero-cost ops: aliases, metadata, layout changes — no HBM
+            if (" get-tuple-element(" in ln or " tuple(" in ln
+                    or " bitcast(" in ln or " parameter(" in ln
+                    or ln.startswith("ROOT %tuple")
+                    or " after-all(" in ln or " constant(" in ln):
+                pass
+            else:
+                b, _ = _parse_shape(ln)
+                by += 2.0 * b                   # write + ~read proxy
+            if " dot(" in ln:
+                fl += _dot_flops(ln, sym)
+            elif "convolution(" in ln:
+                fl += _dot_flops(ln, sym)       # same shape heuristic
+            for op in _COLL_OPS:
+                if f" {op}(" in ln or f"{op}-start(" in ln:
+                    co += _collective_wire(ln, op)
+                    break
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                tc = _TRIP_CFG.search(ln)       # XLA's own annotation first
+                t = int(tc.group(1)) if tc else trip_count(
+                    comps.get(cond, []))
+                if t is None and known_trips:
+                    t = known_trips.get(body, 1)
+                ed.append((body, float(t or 1), "while"))
+                continue
+            fm = _FUSION_RE.search(ln)
+            if fm:
+                # fusion internals: real flops/collectives, but the
+                # intermediates live in registers/VMEM — no HBM bytes
+                ed.append((fm.group(1), 1.0, "fusion"))
+                continue
+            cm2 = _CALL_RE.search(ln)
+            if cm2 and ("reduce(" in ln or "call(" in ln or "map(" in ln
+                        or "scatter(" in ln or "select-and-scatter(" in ln
+                        or "sort(" in ln or "custom-call(" in ln):
+                ed.append((cm2.group(1), 1.0, "call"))
+        local[name] = (fl, by, co)
+        edges[name] = ed
+
+    # propagate with memoized DFS (call graph is a DAG in HLO)
+    memo: Dict[str, Tuple[float, float, float]] = {}
+
+    def total(name: str, depth=0) -> Tuple[float, float, float]:
+        if name in memo:
+            return memo[name]
+        if name not in local or depth > 64:
+            return (0.0, 0.0, 0.0)
+        fl, by, co = local[name]
+        for child, mult, kind in edges.get(name, []):
+            cf, cb, cc = total(child, depth + 1)
+            fl += mult * cf
+            if kind == "while":     # fusion/apply bodies: no HBM traffic
+                by += mult * cb
+            co += mult * cc
+        memo[name] = (fl, by, co)
+        return memo[name]
+
+    fl, by, co = total(entry)
+    return {"flops": fl, "bytes": by, "collective_bytes": co}
+
+
+def analyze_file(path: str, **kw) -> Dict[str, float]:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze_hlo(f.read(), **kw)

@@ -1,0 +1,59 @@
+"""Beyond-paper benchmark: the paper's SNR-vs-power tradeoff at LM scale.
+
+Trains a reduced qwen2 under exact vs approximate (noise-model) multipliers
+and reports the loss penalty next to the modeled multiplier power saving —
+the LM analogue of Table IV.  Used by `benchmarks.run` when --full is set
+(it costs ~1 min); `examples/dse_sweep.py` is the interactive version.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AmmConfig, get_arch, reduced
+from repro.core.hwmodel import power
+from repro.core.multipliers import MulSpec
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelRuntime
+from repro.train.optimizer import OptConfig
+from repro.train.trainstep import TrainConfig, init_train_state, \
+    make_train_step
+
+STEPS = 10
+
+
+def _run(mode: str, mul: str, vbl: int) -> float:
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode=mode, mul=mul, wl=16, param=vbl))
+    rt = ModelRuntime.build(cfg)
+    mesh = make_host_mesh(1, 1)
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=STEPS))
+    step = make_train_step(cfg, rt, tc, mesh, global_batch=4)
+    params, opt = init_train_state(cfg, tc, mesh, jax.random.key(0))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    loss = 0.0
+    for i in range(STEPS):
+        t, l = global_batch(dc, i)
+        params, opt, m = step(params, opt, jnp.asarray(t), jnp.asarray(l),
+                              jax.random.fold_in(jax.random.key(1), i))
+        loss = float(m["loss"])
+    return loss
+
+
+def lm_quality():
+    base = _run("off", "bbm0", 0)
+    rows = [{"mul": "exact", "vbl": 0, "loss": base, "power_saving_pct": 0.0}]
+    p0 = power(MulSpec("bbm0", 16, 0))
+    for mul, vbl in (("bbm0", 13), ("bbm0", 15), ("bbm1", 13)):
+        loss = _run("noise", mul, vbl)
+        rows.append({"mul": mul, "vbl": vbl, "loss": loss,
+                     "power_saving_pct":
+                         100 * (1 - power(MulSpec(mul, 16, vbl)) / p0)})
+    worst = max(r["loss"] - base for r in rows[1:])
+    return rows, {"base_loss": base, "worst_loss_penalty": worst,
+                  "max_power_saving_pct": max(r["power_saving_pct"]
+                                              for r in rows)}

@@ -1,0 +1,167 @@
+"""One function per paper table/figure.  Each returns (rows, derived) where
+rows is a list of dicts (the table) and derived a dict of headline numbers
+compared against the paper's claims."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MulSpec, characterize, error_histogram
+from repro.core.hwmodel import (PAPER_AREA_REDUCTION, PAPER_POWER_REDUCTION,
+                                PAPER_TABLE4, area, fir_area, fir_power,
+                                pdp_avg, power, power_at, quap, tmin)
+from repro.dsp import (FIR_DELAY, design_lowpass, fir_apply_fixed,
+                       make_signals, run_filter_case, snr_db)
+
+PAPER_TABLE1 = {
+    3: (-3.50, 2.22e1, 0.6875, -1.10e1),
+    6: (-6.15e1, 5.05e3, 0.9375, -1.71e2),
+    9: (-7.89e2, 7.52e5, 0.9893, -2.22e3),
+    12: (-8.53e3, 8.33e7, 0.9983, -2.32e4),
+}
+
+
+def table1_errstats():
+    """Table I: exhaustive error stats of Broken-Booth Type0, WL=12."""
+    rows = []
+    max_rel = 0.0
+    for vbl, (pm, pmse, pprob, pmin) in PAPER_TABLE1.items():
+        st = characterize(MulSpec("bbm0", 12, vbl))
+        rows.append({"vbl": vbl, "mean": st.mean, "mse": st.mse,
+                     "prob": st.prob, "min": st.min,
+                     "paper_mean": pm, "paper_mse": pmse,
+                     "paper_prob": pprob, "paper_min": pmin})
+        max_rel = max(max_rel, abs(st.mse - pmse) / pmse,
+                      abs(st.mean - pm) / abs(pm))
+    return rows, {"max_rel_delta_vs_paper": max_rel, "n_vectors": 1 << 24}
+
+
+def fig2_histogram():
+    """Fig 2: error distribution, WL=10, VBL=9 (normalized to 2^19)."""
+    centers, pct = error_histogram(MulSpec("bbm0", 10, 9), bins=41)
+    mass_neg = float(pct[centers < 0].sum())
+    nonzero_bins = int((pct > 0.1).sum())
+    return ([{"center": float(c), "pct": float(p)}
+             for c, p in zip(centers, pct) if p > 0],
+            {"negative_mass_pct": mass_neg, "resolved_bins": nonzero_bins})
+
+
+def table2_3_power_area():
+    """Tables II/III: modeled power/area reduction vs the paper's means."""
+    rows = []
+    deltas = []
+    for wl in (4, 8, 12, 16):
+        p0, p1 = power(MulSpec("bbm0", wl, 0)), power(MulSpec("bbm0", wl, wl - 1))
+        a0, a1 = area(MulSpec("bbm0", wl, 0)), area(MulSpec("bbm0", wl, wl - 1))
+        pr, ar = 100 * (1 - p1 / p0), 100 * (1 - a1 / a0)
+        rows.append({"wl": wl, "vbl": wl - 1,
+                     "power_red_model": pr,
+                     "power_red_paper": PAPER_POWER_REDUCTION[wl],
+                     "area_red_model": ar,
+                     "area_red_paper": PAPER_AREA_REDUCTION[wl]})
+        deltas += [abs(pr - PAPER_POWER_REDUCTION[wl]),
+                   abs(ar - PAPER_AREA_REDUCTION[wl])]
+    return rows, {"mean_abs_delta_pp": float(np.mean(deltas))}
+
+
+def fig3_power_delay():
+    """Fig 3: power vs delay constraint, accurate vs approximate, WL=16."""
+    acc, app = MulSpec("booth", 16, 0), MulSpec("bbm0", 16, 15)
+    t_acc, t_app = tmin(acc), tmin(app)
+    rows = []
+    for mult in (1.0, 1.25, 1.5, 1.75, 2.0):
+        t = t_acc * mult
+        rows.append({"delay_ns": t,
+                     "power_accurate": power_at(acc, t),
+                     "power_approx": power_at(app, t)})
+    ratio = np.mean([r["power_approx"] / r["power_accurate"] for r in rows])
+    return rows, {"tmin_accurate_ns": t_acc, "tmin_approx_ns": t_app,
+                  "speedup_pct": 100 * (1 - t_app / t_acc),
+                  "paper_speedup_pct": 6.6,
+                  "mean_power_ratio": float(ratio)}
+
+
+def fig56_pdp_mse(wl: int = 12):
+    """Figs 5/6: average PDP vs MSE for the four studied multipliers."""
+    sweeps = {
+        "bbm0": [MulSpec("bbm0", wl, v) for v in (1, 3, 5, 7, 9, 11)],
+        "bbm1": [MulSpec("bbm1", wl, v) for v in (1, 3, 5, 7, 9, 11)],
+        "bam": [MulSpec("bam", wl, v) for v in (3, 6, 9, 12, 15)],
+        "kulkarni": [MulSpec("kulkarni", wl, k) for k in (5, 9, 13, 17, 21)],
+        # beyond-paper comparand: ETM (the paper's ref [5], not synthesized
+        # there) on the same PDP-vs-MSE axes
+        "etm": [MulSpec("etm", wl, sp) for sp in (3, 5, 7, 9)],
+    }
+    rows = []
+    for name, specs in sweeps.items():
+        for sp in specs:
+            st = characterize(sp, exhaustive=False, sample=1 << 18)
+            rows.append({"mul": name, "param": sp.param,
+                         "mse": st.mse, "pdp": pdp_avg(sp)})
+    # paper claims: kulkarni best at low MSE but flat; booth-family falls
+    # steadily; type0 more graceful than type1
+    by = lambda n: sorted([r for r in rows if r["mul"] == n],
+                          key=lambda r: r["param"])
+    kul = by("kulkarni")
+    b0 = by("bbm0")
+    derived = {
+        "kulkarni_pdp_span": kul[0]["pdp"] / kul[-1]["pdp"],
+        "bbm0_pdp_span": b0[0]["pdp"] / b0[-1]["pdp"],
+        "bbm0_beats_kulkarni_at_high_mse":
+            bool(b0[-1]["pdp"] < kul[-1]["pdp"]),
+    }
+    return rows, derived
+
+
+def fig8_snr():
+    """Fig 8: SNR vs WL (wl-bit datapath) and SNR vs VBL (WL=16)."""
+    sig = make_signals()
+    h = design_lowpass()
+    rows = []
+    for wl in (8, 10, 12, 14, 16, 18, 20):
+        y = fir_apply_fixed(sig.x, h, MulSpec("booth", wl, 0),
+                            datapath="wlbit")
+        rows.append({"sweep": "wl", "x": wl,
+                     "snr_db": snr_db(sig.d1, y, FIR_DELAY)})
+    for vbl in (0, 3, 5, 7, 9, 11, 13, 15, 17, 19):
+        y = fir_apply_fixed(sig.x, h, MulSpec("bbm0", 16, vbl))
+        rows.append({"sweep": "vbl", "x": vbl,
+                     "snr_db": snr_db(sig.d1, y, FIR_DELAY)})
+    dbl = run_filter_case(None, sig)
+    vbl_rows = [r for r in rows if r["sweep"] == "vbl"]
+    op = max((r for r in vbl_rows if r["snr_db"] >= dbl - 0.45),
+             key=lambda r: r["x"])
+    return rows, {"snr_double_db": dbl, "paper_snr_double_db": 25.7,
+                  "operating_vbl_0p4dB": op["x"], "paper_operating_vbl": 13,
+                  "snr_at_operating": op["snr_db"]}
+
+
+def table4_filter():
+    """Table IV: the three synthesis cases + QUAP (model power/area, our
+    measured SNRs)."""
+    sig = make_signals()
+    cases = [("WL=16,VBL=0", 16, 0), ("WL=16,VBL=13", 16, 13),
+             ("WL=16,VBL=15", 16, 15), ("WL=14,VBL=0", 14, 0)]
+    rows = []
+    for label, wl, vbl in cases:
+        spec = MulSpec("booth" if vbl == 0 else "bbm0", wl, vbl)
+        snr = run_filter_case(spec, sig)
+        rows.append({"case": label, "snr_db": snr,
+                     "power_mw": fir_power(wl, vbl),
+                     "area_um2": fir_area(wl, vbl)})
+    base = rows[0]
+    for r in rows[1:]:
+        pwr_sav = 100 * (1 - r["power_mw"] / base["power_mw"])
+        area_sav = 100 * (1 - r["area_um2"] / base["area_um2"])
+        r["power_saving_pct"] = pwr_sav
+        r["quap"] = quap(r["snr_db"], max(area_sav, 0.0), max(pwr_sav, 0.0))
+    paper_snr = {k: v[0] for k, v in PAPER_TABLE4.items()}
+    derived = {
+        "power_red_vbl13_pct": rows[1]["power_saving_pct"],
+        "paper_power_red_pct": 17.1,
+        "snr_loss_vbl13_db": rows[0]["snr_db"] - rows[1]["snr_db"],
+        "paper_snr_loss_db": 0.35,
+        "quap_vbl13_over_wl14":
+            rows[1]["quap"] / max(rows[3].get("quap", 1e-9), 1e-9),
+        "paper_quap_ratio": 13.1 / 7.73,
+    }
+    return rows, derived

@@ -1,0 +1,91 @@
+"""Benchmark driver: one function per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+whole table's computation; derived = headline comparison vs the paper).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import paper_tables  # noqa: E402
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    short = {k: (round(v, 4) if isinstance(v, float) else v)
+             for k, v in derived.items()}
+    print(f"{name},{us:.0f},{json.dumps(short, sort_keys=True)}")
+    return rows, derived
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _run("table1_errstats", paper_tables.table1_errstats)
+    _run("fig2_histogram", paper_tables.fig2_histogram)
+    _run("table2_3_power_area", paper_tables.table2_3_power_area)
+    _run("fig3_power_delay", paper_tables.fig3_power_delay)
+    _run("fig56_pdp_mse", paper_tables.fig56_pdp_mse)
+    _run("fig8_snr", paper_tables.fig8_snr)
+    _run("table4_filter", paper_tables.table4_filter)
+    if "--full" in sys.argv:
+        from benchmarks.lm_quality import lm_quality
+        _run("lm_quality_beyond_paper", lm_quality)
+
+    # roofline summary over whatever dry-run cells exist so far
+    try:
+        from benchmarks.roofline import analyze
+        rows = [r for r in analyze() if r.get("ok")]
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_frac"])
+            best = max(rows, key=lambda r: r["roofline_frac"])
+            doms = {}
+            for r in rows:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+            summary = {
+                "cells": len(rows),
+                "dominant_counts": doms,
+                "worst": (f"{worst['arch']}/{worst['shape']}"
+                          f"={worst['roofline_frac']:.3f}"),
+                "best": (f"{best['arch']}/{best['shape']}"
+                         f"={best['roofline_frac']:.3f}"),
+            }
+            print(f"roofline_summary,0,{json.dumps(summary)}")
+            # full per-cell tables (deliverable g): baselines then variants
+            from benchmarks.roofline import render_table
+            for mesh in ("16x16", "2x16x16"):
+                sub = [r for r in analyze(mesh=mesh) if r.get("ok")
+                       and not r.get("variant")]
+                if sub:
+                    print(f"\n== roofline baselines, mesh {mesh} "
+                          f"({len(sub)} cells) ==")
+                    print(render_table(sub))
+            variants = [r for r in analyze(mesh=None) if r.get("ok")
+                        and r.get("variant")]
+            if variants:
+                print(f"\n== roofline perf-iteration variants "
+                      f"({len(variants)}) ==")
+                hdr = (f"{'arch':18s} {'shape':12s} {'variant':16s} "
+                       f"{'compute_s':>10s} {'memory_s':>10s} "
+                       f"{'collect_s':>10s} {'roofline':>9s}")
+                print(hdr)
+                for r in sorted(variants,
+                                key=lambda x: (x["arch"], x["variant"])):
+                    print(f"{r['arch']:18s} {r['shape']:12s} "
+                          f"{r['variant']:16s} {r['t_compute_s']:10.3e} "
+                          f"{r['t_memory_s']:10.3e} "
+                          f"{r['t_collective_s']:10.3e} "
+                          f"{r['roofline_frac']:9.4f}")
+    except FileNotFoundError:
+        print('roofline_summary,0,{"cells": 0}')
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Beyond-paper: design-space exploration of approximate multipliers inside
+an LM — the paper's technique as a first-class model feature.
+
+Trains a reduced qwen2 for a few steps under several (multiplier, VBL)
+settings using the calibrated white-noise error model, reporting the loss
+penalty next to the modeled multiplier power saving: the LM-scale version
+of the paper's SNR-vs-power tradeoff.
+
+    PYTHONPATH=src python examples/dse_sweep.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AmmConfig, get_arch, reduced
+from repro.core.hwmodel import power
+from repro.core.multipliers import MulSpec
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelRuntime
+from repro.train.optimizer import OptConfig
+from repro.train.trainstep import TrainConfig, init_train_state, \
+    make_train_step
+
+STEPS = 8
+
+
+def run(amm_mode, vbl):
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode=amm_mode, mul="bbm0", wl=16, param=vbl,
+                           apply_to="mlp"))
+    rt = ModelRuntime.build(cfg)
+    mesh = make_host_mesh(1, 1)
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=STEPS))
+    step = make_train_step(cfg, rt, tc, mesh, global_batch=4)
+    params, opt = init_train_state(cfg, tc, mesh, jax.random.key(0))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    loss = None
+    for i in range(STEPS):
+        t, l = global_batch(dc, i)
+        params, opt, m = step(params, opt, jnp.asarray(t), jnp.asarray(l),
+                              jax.random.fold_in(jax.random.key(1), i))
+        loss = float(m["loss"])
+    return loss
+
+
+def main():
+    base = run("off", 0)
+    print(f"exact multipliers:        final loss {base:.4f}")
+    p0 = power(MulSpec("bbm0", 16, 0))
+    for vbl in (9, 13, 15):
+        l = run("noise", vbl)
+        saving = 100 * (1 - power(MulSpec("bbm0", 16, vbl)) / p0)
+        print(f"bbm0 WL=16 VBL={vbl:2d}:      final loss {l:.4f} "
+              f"(+{l - base:+.4f})   multiplier power -{saving:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""End-to-end driver: serve a reduced model with batched requests through
+the slot scheduler (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "6",
+                "--slots", "4", "--max-new", "12"] + sys.argv[1:])

@@ -1,0 +1,16 @@
+"""End-to-end driver: train a ~small LM for a few hundred steps on the
+synthetic pipeline with the fault-tolerant loop (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+(thin wrapper over repro.launch.train with curated defaults)
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "llama3.2-3b", "--reduced", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--ckpt-every", "50"]
+    # user args win
+    train_main(defaults + args)

@@ -1,0 +1,15 @@
+"""Whisper-base backbone: enc-dec transformer; conv audio frontend is a STUB
+(input_specs provides precomputed frame embeddings) [arXiv:2212.04356].
+
+TPU adaptation note: positional encoding is RoPE here (the original uses
+sinusoidal/learned); the assignment covers the transformer backbone only.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    head_dim=64, d_ff=2048, vocab=51865,
+    is_encoder_decoder=True, n_encoder_layers=6, encoder_len=1500,
+    frontend="audio",
+)

@@ -1,0 +1,38 @@
+"""Broken-Array Multiplier (Mahdiani et al., paper ref [1]).
+
+Unsigned carry-save array multiplier with cells removed below the Horizontal
+Breaking Level (HBL) and to the right of the Vertical Breaking Level (VBL).
+
+Row i (i = 0..wl-1) holds dots a_j * b_i in columns i+j.  Breaking:
+  * VBL: drop dots with column index  i + j < VBL
+  * HBL: drop *rows* with i < HBL (the paper's comparison uses HBL = 0)
+
+    p = sum_{i >= hbl} b_i * ( a & ~(2^{max(0, vbl-i)} - 1) ) * 2^i
+
+The paper notes BAM and its signed counterpart have identical MSE; we follow
+the paper and compare on the unsigned version, mapping signed inputs through
+their magnitude when used inside signed datapaths (see multipliers.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .booth import to_unsigned
+
+__all__ = ["bam_mul"]
+
+
+@partial(jax.jit, static_argnames=("wl", "vbl", "hbl"))
+def bam_mul(a, b, wl: int, vbl: int, hbl: int = 0):
+    """BAM product of unsigned wl-bit a, b (int32 in/out, 2*wl-bit result)."""
+    au = to_unsigned(a, wl)[..., None]
+    bu = to_unsigned(b, wl)[..., None]
+    i = jnp.arange(wl, dtype=jnp.int32)
+    b_i = (bu >> i) & 1
+    m = jnp.maximum(0, vbl - i)
+    a_masked = au & ~((jnp.int32(1) << m) - 1)
+    row = jnp.where(i >= hbl, b_i * a_masked, 0)
+    return jnp.sum(row << i, axis=-1)

@@ -1,0 +1,84 @@
+"""Broken-Booth Multiplier (the paper's contribution), Type0 and Type1.
+
+Closed-form, vectorized integer formulas for the dot-diagram truncation of
+Fig. 1.  Both are validated bit-for-bit against the dot-level simulator in
+``ref_sim.py`` (tests/test_bbm.py).
+
+Semantics (columns are bit positions of the 2*wl-bit product; VBL nullifies
+every dot in columns < VBL):
+
+Type0 — rows carry d_i * A as a complete two's-complement value (the +1 of
+the complement already folded in); zeroing the low ``m_i = max(0, VBL - 2i)``
+bits of a two's-complement value is flooring toward -inf:
+
+    p = sum_i floor(d_i * A / 2^m_i) * 2^m_i * 4^i
+
+Type1 — negative rows are one's-complemented only; the S (+1) dot sits in
+column 2i and is dropped when 2i < VBL.  Hardware's row value before the S is
+``-(mag_i * A) - 1`` (one's complement, sign-extended); the "negative zero"
+triplet (111) produces mag=0, neg=1: an all-ones row (-1) plus S:
+
+    row_i = mag_i * A                 if neg_i == 0
+          = -(mag_i * A) - 1         if neg_i == 1
+    p = sum_i [ floor(row_i / 2^m_i) * 2^m_i + neg_i * (m_i == 0) ] * 4^i
+
+VBL = 0 reduces both types to the exact Booth product.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .booth import booth_digits, num_pp_rows, to_signed
+
+__all__ = ["bbm_mul", "bbm_type0", "bbm_type1"]
+
+
+def _row_masks(wl: int, vbl: int):
+    # int32-safety: |approx| <= |exact| + ceil(vbl/2)*2^vbl must fit in 31
+    # bits.  The paper never exceeds vbl = wl - 1; we allow a wide margin.
+    limit = 2 * wl - 6 if wl >= 14 else 2 * wl
+    if not 0 <= vbl <= limit:
+        raise ValueError(f"vbl={vbl} outside int32-safe range [0, {limit}] "
+                         f"for wl={wl}")
+    n = num_pp_rows(wl)
+    i = jnp.arange(n, dtype=jnp.int32)
+    m = jnp.maximum(0, vbl - 2 * i)                     # bits to clear per row
+    two_m = jnp.int32(1) << m
+    weight = jnp.int32(1) << (2 * i)
+    return m, two_m, weight
+
+
+def bbm_type0(a, b, wl: int, vbl: int):
+    """Broken-Booth Type0 product of signed wl-bit a, b (int32 in/out)."""
+    a_s = to_signed(a, wl)[..., None]
+    d, _ = booth_digits(b, wl)
+    _, two_m, weight = _row_masks(wl, vbl)
+    rows = d * a_s                                       # d_i * A, signed
+    trunc = jnp.floor_divide(rows, two_m) * two_m
+    return jnp.sum(trunc * weight, axis=-1)
+
+
+def bbm_type1(a, b, wl: int, vbl: int):
+    """Broken-Booth Type1 product of signed wl-bit a, b (int32 in/out)."""
+    a_s = to_signed(a, wl)[..., None]
+    d, neg = booth_digits(b, wl)
+    m, two_m, weight = _row_masks(wl, vbl)
+    mag = jnp.abs(d)
+    pos_val = mag * a_s
+    row = jnp.where(neg == 1, -pos_val - 1, pos_val)
+    trunc = jnp.floor_divide(row, two_m) * two_m
+    s_dot = jnp.where((neg == 1) & (m == 0), 1, 0)
+    return jnp.sum((trunc + s_dot) * weight, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("wl", "vbl", "kind"))
+def bbm_mul(a, b, wl: int, vbl: int, kind: int = 0):
+    """Dispatcher: kind=0 -> Type0, kind=1 -> Type1."""
+    if kind == 0:
+        return bbm_type0(a, b, wl, vbl)
+    if kind == 1:
+        return bbm_type1(a, b, wl, vbl)
+    raise ValueError(f"unknown BBM kind {kind}")

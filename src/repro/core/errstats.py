@@ -1,0 +1,136 @@
+"""Error characterization of approximate multipliers (paper §II.B).
+
+Implements the paper's evaluation method: model the arithmetic behaviour and
+apply either *all* possible input vectors exhaustively (2^(2*wl) pairs — the
+paper's Table I uses wl=12, N = 2^24) or a random sample.  Reports the four
+Table I statistics plus the error histogram of Fig. 2.
+
+    error = approximate output - accurate output            (Eq. 1)
+    MSE   = (1/N) * sum_i error(i)^2                        (Eq. 2)
+
+The device computes raw int32 error vectors per chunk (vectorized over the
+full second operand axis); moment accumulation happens on the host in
+float64 so the Table I sums (up to ~1e15) are exact without enabling x64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .booth import to_signed
+from .multipliers import MulSpec, mul
+
+__all__ = ["ErrorStats", "characterize", "error_histogram"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorStats:
+    """Error moments of an approximate multiplier over a given input set."""
+    mean: float
+    mse: float
+    prob: float          # P(error != 0)
+    min: float
+    max: float
+    var: float
+    n: int
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(max(self.var, 0.0)))
+
+    def row(self) -> str:
+        return (f"mean={self.mean:+.4g} mse={self.mse:.4g} "
+                f"prob={self.prob:.4f} min={self.min:+.4g} max={self.max:+.4g}")
+
+
+@partial(jax.jit, static_argnames=("name", "wl", "param", "hbl"))
+def _err_vs_b(a_chunk, name, wl, param, hbl):
+    """int32 error of a_chunk x (all 2^wl b values)."""
+    spec = MulSpec(name, wl, param, hbl)
+    b = jnp.arange(1 << wl, dtype=jnp.int32)
+    a = a_chunk[:, None]
+    return mul(spec)(a, b) - to_signed(a, wl) * to_signed(b, wl)
+
+
+@partial(jax.jit, static_argnames=("name", "wl", "param", "hbl"))
+def _err_pairs(a, b, name, wl, param, hbl):
+    spec = MulSpec(name, wl, param, hbl)
+    return mul(spec)(a, b) - to_signed(a, wl) * to_signed(b, wl)
+
+
+def characterize(spec: MulSpec, *, exhaustive: Optional[bool] = None,
+                 sample: int = 1 << 20, seed: int = 0,
+                 chunk: int = 1 << 8) -> ErrorStats:
+    """Characterize ``spec`` exhaustively (default for wl <= 12) or sampled."""
+    wl = spec.wl
+    if exhaustive is None:
+        exhaustive = wl <= 12
+
+    s = ss = nz = 0.0
+    mn, mx = np.inf, -np.inf
+    n = 0
+    if exhaustive:
+        for lo in range(0, 1 << wl, chunk):
+            a_chunk = jnp.arange(lo, min(lo + chunk, 1 << wl), dtype=jnp.int32)
+            err = np.asarray(
+                _err_vs_b(a_chunk, spec.name, wl, spec.param, spec.hbl),
+                dtype=np.float64)
+            s += err.sum()
+            ss += (err * err).sum()
+            nz += np.count_nonzero(err)
+            mn = min(mn, float(err.min()))
+            mx = max(mx, float(err.max()))
+            n += err.size
+    else:
+        rng = np.random.default_rng(seed)
+        done = 0
+        while done < sample:
+            m = min(chunk * chunk, sample - done)
+            a = jnp.asarray(rng.integers(0, 1 << wl, size=m, dtype=np.int32))
+            b = jnp.asarray(rng.integers(0, 1 << wl, size=m, dtype=np.int32))
+            err = np.asarray(
+                _err_pairs(a, b, spec.name, wl, spec.param, spec.hbl),
+                dtype=np.float64)
+            s += err.sum()
+            ss += (err * err).sum()
+            nz += np.count_nonzero(err)
+            mn = min(mn, float(err.min()))
+            mx = max(mx, float(err.max()))
+            done += m
+            n += m
+    mean = s / n
+    mse = ss / n
+    return ErrorStats(mean=mean, mse=mse, prob=nz / n, min=mn, max=mx,
+                      var=mse - mean * mean, n=n)
+
+
+def error_histogram(spec: MulSpec, bins: int = 81):
+    """Fig. 2: percentage distribution of error normalized to 2^(2*wl - 1).
+
+    Exhaustive over all pairs (use wl <= 10 as in the paper's figure); the
+    bin range adapts to the observed error span (two passes).
+    Returns (bin_centers_normalized, percentage).
+    """
+    wl = spec.wl
+    norm = float(1 << (2 * wl - 1))
+    st = characterize(spec)
+    lo_e = st.min / norm
+    hi_e = st.max / norm
+    span = max(hi_e - lo_e, 1e-12)
+    edges = np.linspace(lo_e - 0.02 * span, hi_e + 0.02 * span, bins + 1)
+    counts = np.zeros(bins, dtype=np.float64)
+    for lo in range(0, 1 << wl, 256):
+        a_chunk = jnp.arange(lo, min(lo + 256, 1 << wl), dtype=jnp.int32)
+        err = np.asarray(
+            _err_vs_b(a_chunk, spec.name, wl, spec.param, spec.hbl),
+            dtype=np.float64).ravel() / norm
+        c, _ = np.histogram(err, bins=edges)
+        counts += c
+    pct = 100.0 * counts / counts.sum()
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    return centers, pct

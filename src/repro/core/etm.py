@@ -1,0 +1,68 @@
+"""Error-Tolerant Multiplier (Kyaw, Goh & Yeo — paper ref [5]).
+
+ETM splits the wl-bit operands at position ``split`` into a multiplication
+part (high bits) and a non-multiplication part (low bits):
+
+  * if EITHER operand's high part is non-zero: the high parts are multiplied
+    exactly (shifted by 2*split) and the low-part product is *approximated*
+    column-wise: approx_low[i] = OR of the (a_j AND b_k) dots on column i,
+    then all lower columns are set to 1 from the highest active column down
+    (the paper's "set remaining bits to 1" rule, which bounds relative
+    error);
+  * otherwise both high parts are zero and the low parts are multiplied
+    exactly (small numbers keep full precision).
+
+The paper reported >50% power saving for a 12-bit ETM; we include it as an
+extra comparand beyond the three designs the Broken-Booth paper itself
+synthesizes.  Power/area use the dot-inventory model: the low half's
+multiplier array is replaced by OR chains (modeled at 15% of a dot's cost).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .booth import to_unsigned
+
+__all__ = ["etm_mul"]
+
+
+@partial(jax.jit, static_argnames=("wl", "split"))
+def etm_mul(a, b, wl: int, split: int = 0):
+    """ETM product of unsigned wl-bit a, b.  split=0 -> exact multiplier."""
+    if split == 0:
+        return to_unsigned(a, wl) * to_unsigned(b, wl)
+    au = to_unsigned(a, wl)
+    bu = to_unsigned(b, wl)
+    mask_lo = (1 << split) - 1
+    a_hi, a_lo = au >> split, au & mask_lo
+    b_hi, b_lo = bu >> split, bu & mask_lo
+
+    exact_small = au * bu                       # used when both highs zero
+
+    # approximate low-part product: column-wise OR of partial products over
+    # the 2*split - 1 usable columns, then fill 1s below the leading one.
+    cols = jnp.arange(2 * split - 1)
+
+    def col_or(c):
+        j = jnp.arange(split)
+        k = c - j
+        valid = (k >= 0) & (k < split)
+        aj = (a_lo[..., None] >> j) & 1
+        bk = (b_lo[..., None] >> jnp.clip(k, 0, split - 1)) & 1
+        return jnp.any(jnp.where(valid, (aj & bk) == 1, False), axis=-1)
+
+    bits = jnp.stack([col_or(c) for c in range(2 * split - 1)],
+                     axis=-1)                   # (..., 2*split-1)
+    # fill: bit i becomes 1 if any column >= i is 1
+    filled = jnp.cumsum(bits[..., ::-1].astype(jnp.int32), axis=-1)[..., ::-1] > 0
+    low_approx = jnp.sum(filled.astype(jnp.int32) << cols, axis=-1)
+
+    # high-part exact product plus cross terms approximated by the paper's
+    # truncation: (a_hi*b) and (b_hi*a_lo) at full precision of high columns
+    big = ((a_hi * b_hi) << (2 * split)) \
+        + ((a_hi * b_lo + b_hi * a_lo) << split) + low_approx
+    both_small = (a_hi == 0) & (b_hi == 0)
+    return jnp.where(both_small, exact_small, big)

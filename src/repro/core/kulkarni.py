@@ -1,0 +1,49 @@
+"""Underdesigned 2x2-block multiplier (Kulkarni et al., paper ref [3]) with
+the paper's added K parameter.
+
+The 2x2 inaccurate building block computes a*b exactly except 3*3 -> 7
+(instead of 9), saving the fourth output bit.  A wl-bit unsigned multiplier
+is composed of (wl/2)^2 such blocks on 2-bit digits:
+
+    a = sum_i A_i 4^i,  b = sum_j B_j 4^j   (A_i, B_j in 0..3)
+    p = sum_{i,j} m(A_i, B_j) * 4^{i+j}
+
+Block (i,j) spans product columns 2(i+j) .. 2(i+j)+3.  Following the paper's
+Fig. 4, blocks lying *entirely* to the right of the vertical line at column K
+are approximate, the rest exact:
+
+    m = m_approx  if 2*(i+j) + 3 < K  else  A_i * B_j
+
+K = 0 gives the exact multiplier; larger K trades accuracy for power.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .booth import to_unsigned
+
+__all__ = ["kulkarni_mul"]
+
+
+@partial(jax.jit, static_argnames=("wl", "k"))
+def kulkarni_mul(a, b, wl: int, k: int = 0):
+    """Kulkarni 2x2-block product of unsigned wl-bit a, b."""
+    if wl % 2 != 0:
+        raise ValueError("kulkarni multiplier needs an even word length")
+    n = wl // 2
+    au = to_unsigned(a, wl)[..., None]
+    bu = to_unsigned(b, wl)[..., None]
+    i = jnp.arange(n, dtype=jnp.int32)
+    ai = (au >> (2 * i)) & 3                                # (..., n)
+    bj = (bu >> (2 * i)) & 3
+    ai = ai[..., :, None]                                   # (..., n, 1)
+    bj = bj[..., None, :]                                   # (..., 1, n)
+    exact = ai * bj
+    approx = exact - 2 * ((ai == 3) & (bj == 3)).astype(jnp.int32)
+    col = 2 * (i[:, None] + i[None, :])                     # (n, n) block LSB column
+    use_approx = (col + 3) < k
+    m = jnp.where(use_approx, approx, exact)
+    return jnp.sum(m << col, axis=(-2, -1))

@@ -1,0 +1,77 @@
+"""Registry of approximate multipliers behind one uniform interface.
+
+A multiplier spec is ``MulSpec(name, wl, param, kind)``:
+
+  name   one of {"booth", "bbm0", "bbm1", "bam", "kulkarni"}
+  wl     word length of both operands (even)
+  param  precision knob: VBL for booth-family/BAM, K for kulkarni, ignored
+         for exact booth
+  hbl    BAM-only horizontal breaking level (paper comparison uses 0)
+
+``mul(spec)(a, b)`` maps int32 arrays of wl-bit operands to int32 products.
+Signed semantics: booth/bbm take two's-complement signed operands natively.
+BAM/Kulkarni are unsigned designs; for use inside signed datapaths we follow
+the paper ("no difference between BAM and its signed counterpart, in terms of
+MSE") and apply them sign-magnitude: p = sign(a)*sign(b) * m(|a|, |b|).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .bam import bam_mul
+from .bbm import bbm_type0, bbm_type1
+from .booth import booth_mul_exact, to_signed
+from .etm import etm_mul
+from .kulkarni import kulkarni_mul
+
+__all__ = ["MulSpec", "mul", "MULTIPLIERS", "EXACT"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MulSpec:
+    name: str = "booth"
+    wl: int = 16
+    param: int = 0          # VBL or K
+    hbl: int = 0            # BAM only
+
+    def __post_init__(self):
+        if self.name not in MULTIPLIERS:
+            raise ValueError(f"unknown multiplier {self.name!r}")
+        if self.wl % 2 != 0:
+            raise ValueError("word length must be even")
+
+    @property
+    def is_exact(self) -> bool:
+        return self.param == 0 and self.hbl == 0 or self.name == "booth" and self.param == 0
+
+
+def _signed_wrap(unsigned_fn: Callable, a, b, wl: int, **kw):
+    a_s = to_signed(a, wl)
+    b_s = to_signed(b, wl)
+    sign = jnp.sign(a_s) * jnp.sign(b_s)
+    return sign * unsigned_fn(jnp.abs(a_s), jnp.abs(b_s), wl=wl, **kw)
+
+
+MULTIPLIERS = {
+    "booth": lambda a, b, wl, param, hbl: booth_mul_exact(a, b, wl),
+    "bbm0": lambda a, b, wl, param, hbl: bbm_type0(a, b, wl, param),
+    "bbm1": lambda a, b, wl, param, hbl: bbm_type1(a, b, wl, param),
+    "bam": lambda a, b, wl, param, hbl: _signed_wrap(
+        partial(bam_mul, hbl=hbl), a, b, wl, vbl=param),
+    "kulkarni": lambda a, b, wl, param, hbl: _signed_wrap(
+        kulkarni_mul, a, b, wl, k=param),
+    "etm": lambda a, b, wl, param, hbl: _signed_wrap(
+        etm_mul, a, b, wl, split=param),
+}
+
+EXACT = MulSpec("booth", 16, 0)
+
+
+def mul(spec: MulSpec) -> Callable:
+    """Return f(a, b) -> approximate signed product for the given spec."""
+    fn = MULTIPLIERS[spec.name]
+    return lambda a, b: fn(a, b, spec.wl, spec.param, spec.hbl)

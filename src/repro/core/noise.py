@@ -1,0 +1,75 @@
+"""Statistical error-injection model (paper §II.B, ref [11]).
+
+The paper analyzes the multiplier's output error as an additive white noise
+source with a defined power level (Oppenheim & Schafer's quantization-noise
+methodology).  We apply the same model *generatively*: for a dot product of
+length K computed on approximate hardware, the accumulated error is
+approximately Normal(K * mu, K * sigma^2) by CLT over the (near-independent)
+per-product errors.
+
+This is what makes the technique usable inside 100M..671B-parameter models:
+characterize once (exhaustive/sampled, `errstats.characterize`), then inject
+the calibrated noise around an *exact* MXU matmul.  Bit-exact emulation
+(kernels/bbm_matmul.py) remains available to validate the noise model — see
+tests/test_noise.py which checks injected moments against bit-exact runs.
+
+Operand-scale correction: the characterized (mu, sigma) assume uniform
+wl-bit operands.  Truncation error of row i is ~ d_i*A mod 2^m, whose moments
+scale with the *multiplicand* magnitude distribution; for zero-mean inputs
+narrower than full scale we scale mu and sigma by E|a|/E|a_full| (a first
+order correction validated in tests to within a few percent for the
+configurations used by the model layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .errstats import ErrorStats, characterize
+from .multipliers import MulSpec
+
+__all__ = ["NoiseModel", "make_noise_model", "inject_dot_error"]
+
+_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Calibrated additive-error model for one multiplier spec."""
+    spec: MulSpec
+    mean: float           # per-product error mean (int domain)
+    var: float            # per-product error variance (int domain)
+
+    def dot_moments(self, k: int) -> tuple:
+        """(mean, std) of the error of a K-term dot product."""
+        return k * self.mean, float(np.sqrt(k * self.var))
+
+
+def make_noise_model(spec: MulSpec, *, sample: int = 1 << 20,
+                     stats: Optional[ErrorStats] = None) -> NoiseModel:
+    """Characterize (cached) and wrap as a NoiseModel."""
+    key = (spec, sample)
+    if key not in _CACHE:
+        st = stats or characterize(spec, sample=sample)
+        _CACHE[key] = NoiseModel(spec=spec, mean=st.mean, var=st.var)
+    return _CACHE[key]
+
+
+def inject_dot_error(y_int, key, model: NoiseModel, k: int,
+                     amp_scale=1.0):
+    """Add calibrated accumulated error to an exact int-domain dot product.
+
+    y_int:     exact dot-product result in the integer (pre-descale) domain
+    key:       PRNG key
+    k:         dot-product length (number of accumulated products)
+    amp_scale: operand-magnitude correction factor (E|a| ratio), may be a
+               traced scalar.
+    """
+    mu = model.mean * k * amp_scale
+    sigma = jnp.sqrt(jnp.maximum(model.var * k, 0.0)) * amp_scale
+    noise = mu + sigma * jax.random.normal(key, y_int.shape, dtype=y_int.dtype)
+    return y_int + noise

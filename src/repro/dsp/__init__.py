@@ -1,0 +1,10 @@
+"""Fixed-point DSP substrate: FIR filter + SNR testbed (paper §III.C)."""
+from .fixed_point import dequantize, quantize, requant_scale
+from .fir import FIR_DELAY, design_lowpass, fir_apply_fixed, fir_apply_real
+from .testbed import TestSignals, make_signals, run_filter_case, snr_db
+
+__all__ = [
+    "dequantize", "quantize", "requant_scale",
+    "FIR_DELAY", "design_lowpass", "fir_apply_fixed", "fir_apply_real",
+    "TestSignals", "make_signals", "run_filter_case", "snr_db",
+]

@@ -1,0 +1,29 @@
+"""Fixed-point quantization helpers (Q-format, two's complement).
+
+Values live in [-1, 1) as Q(1, wl-1): q = round(x * 2^(wl-1)) clipped to the
+signed wl-bit range.  Integers are carried in int32 masked to wl bits so they
+feed the core multipliers directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize", "dequantize", "requant_scale"]
+
+
+def quantize(x, wl: int):
+    """Real [-1,1) -> signed wl-bit integer code (int32, masked to wl bits)."""
+    scale = float(1 << (wl - 1))
+    q = jnp.clip(jnp.round(x * scale), -scale, scale - 1).astype(jnp.int32)
+    return q & ((1 << wl) - 1)
+
+
+def dequantize(q_signed, wl: int):
+    """Signed integer code -> real."""
+    return q_signed.astype(jnp.float32) / float(1 << (wl - 1))
+
+
+def requant_scale(wl: int) -> float:
+    """Scale of a full-precision product of two Q(1, wl-1) values."""
+    return float(1 << (2 * (wl - 1)))

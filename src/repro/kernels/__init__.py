@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
+from .fir_kernel import fir_bbm
+from .ops import bbm_matmul, flash_attention, on_tpu, quant_matmul
+
+__all__ = ["bbm_matmul", "fir_bbm", "flash_attention", "on_tpu", "quant_matmul"]

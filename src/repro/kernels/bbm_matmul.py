@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: bit-exact Broken-Booth approximate matmul.
+
+Computes ``out[m, n] = sum_k shift(bbm(x[m, k], w[k, n]))`` where ``bbm`` is
+the closed-form Broken-Booth product (Type0/Type1) and ``shift`` an optional
+arithmetic right shift applied per product (the fixed-point MAC rescale).
+
+TPU adaptation notes (this is the paper's multiplier *as a TPU kernel*):
+  * The MXU performs exact multiplies only, so a broken multiplier cannot use
+    it — the kernel is pure VPU integer work.  The value of running it on TPU
+    is bit-exact emulation of the proposed silicon at memory-bandwidth speed,
+    for datapath validation and for calibrating the statistical noise model
+    that the MXU fast path (quant_matmul) uses.
+  * The Booth row loop (wl/2 iterations) is unrolled at trace time; each row
+    materializes one (bm, bk, bn) int32 tile in VMEM.  With the default
+    64x64x64 blocking that is 1 MiB live — comfortably inside the ~16 MiB
+    VMEM budget together with the x/w/out tiles.
+  * Accumulation is int32.  Callers must respect the documented overflow
+    envelope: K * 2^(2*wl - 1 - shift) < 2^31 (asserted in ops.py).
+
+Block shapes are (bm, bk) x (bk, bn) -> (bm, bn) with a 3-D grid over
+(M/bm, N/bn, K/bk); the K axis accumulates in place (output revisited).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.booth import num_pp_rows
+
+__all__ = ["bbm_matmul_kernel", "bbm_matmul"]
+
+
+def _row_params(wl: int, vbl: int):
+    """Static per-row (weight, mask_pow) pairs for the unrolled Booth loop."""
+    out = []
+    for i in range(num_pp_rows(wl)):
+        m = max(0, vbl - 2 * i)
+        out.append((i, m))
+    return out
+
+
+def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
+                      shift: int, n_k: int):
+    """One (bm, bn) output tile; grid axis 2 streams K blocks."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                      # (bm, bk) int32, wl-bit codes
+    w = w_ref[...]                      # (bk, bn) int32, wl-bit codes
+    mask = (1 << wl) - 1
+    sign_bit = 1 << (wl - 1)
+
+    xu = x & mask
+    x_s = jnp.where(xu >= sign_bit, xu - (1 << wl), xu)     # signed A
+    wu = (w & mask)[None, :, :]                              # broadcast (1,bk,bn)
+    a = x_s[:, :, None]                                      # (bm, bk, 1)
+
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    prod = jnp.zeros(x.shape + (w.shape[-1],), jnp.int32)    # (bm, bk, bn)
+    prev_hi = None
+    for i, m in _row_params(wl, vbl):
+        # booth digit of w for row i: d = -2*b_hi + b_mid + b_lo
+        b_hi = (wu >> (2 * i + 1)) & 1
+        b_mid = (wu >> (2 * i)) & 1
+        b_lo = jnp.zeros_like(b_mid) if i == 0 else prev_hi
+        prev_hi = b_hi
+        d = -2 * b_hi + b_mid + b_lo
+        two_m = jnp.int32(1 << m)
+        if kind == 0:
+            rows = d * a
+            contrib = (rows >> m) << m       # floor for two's complement
+        else:
+            mag = jnp.abs(d)
+            pos = mag * a
+            rows = jnp.where(b_hi == 1, -pos - 1, pos)
+            contrib = (rows >> m) << m
+            if m == 0:
+                contrib = contrib + b_hi
+        prod = prod + (contrib << (2 * i))
+    # per-product rescale then reduce over the k axis of the tile
+    if shift:
+        prod = prod >> shift
+    acc = jnp.sum(prod, axis=1, dtype=jnp.int32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
+                                             "bm", "bk", "bn", "interpret"))
+def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+               bm: int = 64, bk: int = 64, bn: int = 64,
+               interpret: bool = False):
+    """Tiled bit-exact approximate matmul.  x: (M, K) w: (K, N), int32 codes."""
+    mm, kk = x.shape
+    kk2, nn = w.shape
+    assert kk == kk2
+    grid = (pl.cdiv(mm, bm), pl.cdiv(nn, bn), pl.cdiv(kk, bk))
+    kernel = functools.partial(bbm_matmul_kernel, wl=wl, vbl=vbl, kind=kind,
+                               shift=shift, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: direct-form FIR filter with Broken-Booth tap products.
+
+The paper's own workload as a TPU kernel: ``y[n] = sum_k bbm(x[n-k], h[k])``
+with the closed-form Broken-Booth product per tap.  The signal is blocked
+along time; each block loads its samples plus ``taps-1`` history samples
+(halo) into VMEM, and the tap loop is unrolled at trace time (30 taps).
+
+Accumulation is int32; the caller provides wl-bit codes, so the documented
+envelope is taps * 2^(2*wl-1) < 2^31 (fine for the paper's 31 taps at
+wl <= 12; at wl=16 use the per-product ``shift`` rescale like bbm_matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.booth import num_pp_rows
+
+__all__ = ["fir_bbm"]
+
+
+def _fir_kernel(x_ref, h_ref, o_ref, *, wl: int, vbl: int, kind: int,
+                taps: int, shift: int, block: int):
+    i = pl.program_id(0)
+    # the whole (padded) signal sits in VMEM (FIR signals are small); each
+    # block slices its window + taps-1 halo — overlapping halo reads are not
+    # expressible through BlockSpec index maps
+    xs = jax.lax.dynamic_slice(x_ref[...], (i * block,),
+                               (block + taps - 1,))
+    h = h_ref[...]                         # (taps,) int32 codes
+    mask = (1 << wl) - 1
+    sign = 1 << (wl - 1)
+
+    acc = jnp.zeros((block,), jnp.int32)
+    for t in range(taps):
+        # window of samples feeding tap t for each output in the block
+        a = jax.lax.dynamic_slice(xs, (taps - 1 - t,), (block,))
+        au = a & mask
+        a_s = jnp.where(au >= sign, au - (1 << wl), au)
+        bu = h[t] & mask
+        prod = jnp.zeros((block,), jnp.int32)
+        prev_hi = jnp.int32(0)
+        for r in range(num_pp_rows(wl)):
+            b_hi = (bu >> (2 * r + 1)) & 1
+            b_mid = (bu >> (2 * r)) & 1
+            b_lo = jnp.int32(0) if r == 0 else prev_hi
+            prev_hi = b_hi
+            d = -2 * b_hi + b_mid + b_lo
+            m = max(0, vbl - 2 * r)
+            if kind == 0:
+                rows = d * a_s
+                contrib = (rows >> m) << m
+            else:
+                mag = jnp.abs(d)
+                pos = mag * a_s
+                rows = jnp.where(b_hi == 1, -pos - 1, pos)
+                contrib = (rows >> m) << m
+                if m == 0:
+                    contrib = contrib + b_hi
+            prod = prod + (contrib << (2 * r))
+        if shift:
+            prod = prod >> shift
+        acc = acc + prod
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
+                                             "block", "interpret"))
+def fir_bbm(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+            block: int = 512, interpret: bool = False):
+    """Bit-exact Broken-Booth FIR.  x: (N,) codes, h: (taps,) codes."""
+    n = x.shape[0]
+    taps = h.shape[0]
+    if taps * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
+        raise ValueError("accumulator may overflow int32: raise `shift`")
+    block = min(block, n)
+    nb = pl.cdiv(n, block)
+    pad = nb * block - n
+    xp = jnp.pad(x, (taps - 1, pad))        # history halo + tail pad
+    kernel = functools.partial(_fir_kernel, wl=wl, vbl=vbl, kind=kind,
+                               taps=taps, shift=shift, block=block)
+    n_pad = xp.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+            pl.BlockSpec((taps,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.int32),
+        interpret=interpret,
+    )(xp, h)
+    return out[:n]

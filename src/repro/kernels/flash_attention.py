@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: flash attention (blockwise online softmax).
+
+The serving/training fast path for the 32k prefill shapes.  Standard
+two-level blocking: grid = (batch*heads, Q blocks, KV blocks); the running
+max/denominator/accumulator live in VMEM scratch across the KV axis (declared
+"arbitrary" so the revisits are sequential).
+
+Causal masking is applied at block granularity: KV blocks entirely in the
+future are masked via the per-element comparison (the pure-JAX chunked
+attention in models/attention.py skips them outright; the kernel keeps the
+grid static).
+
+Validated against ref.attention_ref in interpret mode over shape/dtype sweeps
+(tests/test_kernels.py).  The multi-pod dry-run deliberately lowers the pure
+JAX path instead (Pallas kernels do not lower to the CPU backend used for the
+512-device compile check) — selected by ModelConfig.use_pallas_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, bq: int, bk: int, n_kv: int,
+                 skv: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]                                   # (bk, d)
+    # zero out-of-range KV rows: the final block may be padded with
+    # uninitialized memory, and 0 * NaN would poison the p @ v product.
+    kv_rows = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    kv_valid = kv_rows < skv
+    k = jnp.where(kv_valid, k, 0)
+    v = jnp.where(kv_valid, v, 0)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = k_pos < skv
+    if causal:
+        q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        live = live & (q_pos >= k_pos)
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, H, Skv, D) -> (B, H, Sq, D).
+
+    GQA is handled by the caller repeating KV heads (or by reshaping groups
+    into the batch axis); the kernel sees matched head counts.
+    """
+    b, h, sq, d = q.shape
+    _, _, skv, _ = k.shape
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    grid = (b * h, pl.cdiv(sq, bq), pl.cdiv(skv, bk))
+    kernel = functools.partial(
+        _attn_kernel, scale=1.0 / (d ** 0.5), causal=causal,
+        bq=bq, bk=bk, n_kv=grid[2], skv=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

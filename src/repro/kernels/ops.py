@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so every kernel runs (and is tested)
+on CPU via the Pallas interpreter; on TPU backends the compiled kernels are
+used.  The wrappers also enforce the kernels' documented envelopes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bbm_matmul import bbm_matmul as _bbm_matmul
+from .flash_attention import flash_attention as _flash_attention
+from .quant_matmul import quant_matmul as _quant_matmul
+
+__all__ = ["on_tpu", "bbm_matmul", "quant_matmul", "flash_attention"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+               interpret=None, **block_kw):
+    """Bit-exact Broken-Booth matmul (int32 codes in/out)."""
+    k = x.shape[-1]
+    # int32 overflow envelope: K * max|product >> shift| < 2^31
+    if k * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
+        raise ValueError(
+            f"accumulation may overflow int32: K={k}, wl={wl}, shift={shift};"
+            " raise `shift` (fixed-point rescale) or reduce K")
+    if interpret is None:
+        interpret = not on_tpu()
+    return _bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
+                       interpret=interpret, **block_kw)
+
+
+def quant_matmul(x, w, s_x, s_w, mu=0.0, sigma=0.0, *, wl: int = 16,
+                 seed: int = 0, interpret=None, **block_kw):
+    """Fused quantized matmul with calibrated noise injection."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _quant_matmul(x, w, float(s_x), float(s_w), float(mu),
+                         float(sigma), wl=wl, seed=seed,
+                         interpret=interpret, **block_kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, interpret=None,
+                    **block_kw):
+    """Blockwise online-softmax attention."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _flash_attention(q, k, v, causal=causal, interpret=interpret,
+                            **block_kw)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fixed-point quantized matmul with fused approximate-
+multiplier noise injection (the scalable "silicon simulation" fast path).
+
+Implements the paper's §II.B white-noise error model generatively:
+
+    out = (x_q @ w_q) * s_x * s_w  +  eps,
+    eps ~ Normal(K * mu, K * sigma^2) * s_x * s_w   per output element
+
+where (mu, sigma) are the characterized per-product error moments of the
+chosen approximate multiplier (core.noise.NoiseModel) in the integer domain,
+and K is the contraction length.  The matmul itself runs on the MXU in
+bf16->f32; the noise is generated *inside the kernel* from a counter-based
+hash (squares64-style) keyed on (seed, tile coordinates, lane), so the kernel
+stays a single fused pass over VMEM tiles: quantize -> MXU -> noise -> scale.
+
+This is the TPU-native statement of the paper's idea at model scale: the
+quality impact of the proposed multiplier on a workload can be evaluated at
+full training/serving throughput, because the error model — not the broken
+datapath — is what executes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quant_matmul_kernel", "quant_matmul"]
+
+
+def _hash_normal(shape, seed, salt):
+    """Two rounds of a squares-style counter hash -> approx N(0,1).
+
+    Box-Muller over two uint32 uniforms derived from (seed, salt, position).
+    Statistical quality is ample for noise injection (validated in
+    tests/test_kernels.py against moment targets).
+    """
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 2)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+    ctr = r * jnp.uint32(0x9E3779B9) + c * jnp.uint32(0x85EBCA6B)
+    ctr = ctr + jnp.uint32(seed) * jnp.uint32(0xC2B2AE35)
+    ctr = ctr + jnp.uint32(salt) * jnp.uint32(0x27D4EB2F)
+
+    def squares(x, key):
+        x = x * key
+        x = (x >> 16) | (x << 16)
+        x = x * x + key
+        x = (x >> 16) | (x << 16)
+        x = x * x + key
+        return x
+
+    u1 = squares(ctr, jnp.uint32(0xB5AD4ECE)).astype(jnp.float32) / 4294967296.0
+    u2 = squares(ctr ^ jnp.uint32(0xDEADBEEF),
+                 jnp.uint32(0x548C9DEC)).astype(jnp.float32) / 4294967296.0
+    u1 = jnp.clip(u1, 1e-7, 1.0)              # uniforms in [0, 1)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+
+
+def quant_matmul_kernel(x_ref, w_ref, o_ref, *, inv_sx: float, inv_sw: float,
+                        sx: float, sw: float, mu: float, sigma: float,
+                        k_total: int, n_k: int, seed: int, wl: int):
+    """One (bm, bn) tile; K streamed on grid axis 2, noise added on last step."""
+    k_idx = pl.program_id(2)
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    lim = float(2 ** (wl - 1))
+    xq = jnp.clip(jnp.round(x_ref[...] * inv_sx), -lim, lim - 1)
+    wq = jnp.clip(jnp.round(w_ref[...] * inv_sw), -lim, lim - 1)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k_idx == n_k - 1)
+    def _finalize():
+        salt = i * jnp.int32(7919) + j
+        z = _hash_normal(o_ref.shape, seed, salt)
+        eps = mu * k_total + sigma * jnp.sqrt(float(k_total)) * z
+        o_ref[...] = (o_ref[...] + eps) * (sx * sw)
+
+
+@functools.partial(jax.jit, static_argnames=("s_x", "s_w", "mu", "sigma",
+                                             "wl", "bm", "bk", "bn", "seed",
+                                             "interpret"))
+def quant_matmul(x, w, s_x, s_w, mu, sigma, *, wl: int = 16,
+                 bm: int = 128, bk: int = 512, bn: int = 128,
+                 seed: int = 0, interpret: bool = False):
+    """Fused quantize->matmul->noise->dequantize.
+
+    x: (M, K) float, w: (K, N) float; s_x, s_w: python-float quantization
+    scales (real value = code * s); mu, sigma: per-product integer-domain
+    error moments of the multiplier spec being simulated.
+    """
+    mm, kk = x.shape
+    _, nn = w.shape
+    bm = min(bm, mm)
+    bn = min(bn, nn)
+    bk = min(bk, kk)
+    grid = (pl.cdiv(mm, bm), pl.cdiv(nn, bn), pl.cdiv(kk, bk))
+    kernel = functools.partial(
+        quant_matmul_kernel,
+        inv_sx=1.0 / s_x, inv_sw=1.0 / s_w, sx=s_x, sw=s_w,
+        mu=float(mu), sigma=float(sigma), k_total=kk, n_k=grid[2],
+        seed=seed, wl=wl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bbm import bbm_type0, bbm_type1
+
+__all__ = ["bbm_matmul_ref", "quant_matmul_ref", "attention_ref"]
+
+
+def bbm_matmul_ref(x, w, *, wl: int, vbl: int, kind: int = 0,
+                   shift: int = 0):
+    """out[m,n] = sum_k (bbm(x[m,k], w[k,n]) >> shift), int32 accumulation."""
+    fn = bbm_type0 if kind == 0 else bbm_type1
+    prod = fn(x[:, :, None], w[None, :, :], wl, vbl)     # (M, K, N)
+    if shift:
+        prod = prod >> shift
+    return jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def quant_matmul_ref(x, w, s_x, s_w, mu, sigma, *, wl: int = 16, key=None):
+    """Quantize->exact matmul->noise->dequantize, noise via jax.random.
+
+    The kernel uses its own in-tile counter hash, so elementwise equality
+    with this oracle only holds for mu = sigma = 0; with noise the tests
+    compare *moments* (see tests/test_kernels.py).
+    """
+    lim = float(2 ** (wl - 1))
+    xq = jnp.clip(jnp.round(x / s_x), -lim, lim - 1)
+    wq = jnp.clip(jnp.round(w / s_w), -lim, lim - 1)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    k_total = x.shape[-1]
+    if key is not None and (mu != 0.0 or sigma != 0.0):
+        z = jax.random.normal(key, acc.shape, jnp.float32)
+        acc = acc + mu * k_total + sigma * (k_total ** 0.5) * z
+    return acc * (s_x * s_w)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Naive softmax attention, fp32 internals.  q,k,v: (B, H, S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

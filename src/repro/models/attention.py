@@ -1,0 +1,351 @@
+"""Attention blocks: GQA (llama/qwen/grok/yi/chameleon/zamba/whisper) and
+MLA (deepseek-v3), with chunked online-softmax attention for long context.
+
+The chunked path is pure JAX (lax.scan over query and KV blocks) so it
+lowers on any backend — it is what the 512-device dry-run compiles.  On TPU
+the Pallas flash kernel (kernels/flash_attention.py) is selected via
+``use_pallas`` (numerics validated equal in tests).
+
+KV caches are ``(batch, seq, kv_heads, head_dim)`` per tensor (MLA caches the
+compressed latent ``(batch, seq, kv_latent+rope)``), updated with
+``dynamic_update_slice`` at the decode position.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import Spec, apply_rope, rmsnorm
+
+__all__ = ["attn_table", "mla_table", "attention", "mla_attention",
+           "chunked_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _maybe_constrain(x, *axes):
+    """with_sharding_constraint that degrades to a no-op when no mesh is
+    in context (single-host tests); the dry-run lowers under `with mesh:`."""
+    from jax.sharding import PartitionSpec as _P
+    try:
+        return jax.lax.with_sharding_constraint(x, _P(*axes))
+    except (RuntimeError, ValueError):
+        return x
+
+
+# --------------------------------------------------------------- parameters
+def attn_table(cfg: ArchConfig) -> Dict[str, Spec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    t = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = Spec((h, hd), ("heads", "head_dim"), "zeros")
+        t["bk"] = Spec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        t["bv"] = Spec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = Spec((hd,), ("head_dim",), "ones")
+        t["k_norm"] = Spec((hd,), ("head_dim",), "ones")
+    return t
+
+
+def mla_table(cfg: ArchConfig) -> Dict[str, Spec]:
+    d, h = cfg.d_model, cfg.n_heads
+    qk_n, qk_r, v_hd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": Spec((d, cfg.q_lora_rank), ("embed", "q_latent")),
+        "q_a_norm": Spec((cfg.q_lora_rank,), ("q_latent",), "ones"),
+        "wq_b": Spec((cfg.q_lora_rank, h, qk_n + qk_r),
+                     ("q_latent", "heads", "head_dim")),
+        "w_dkv": Spec((d, cfg.kv_lora_rank + qk_r), ("embed", "kv_latent")),
+        "kv_norm": Spec((cfg.kv_lora_rank,), ("kv_latent",), "ones"),
+        "w_uk": Spec((cfg.kv_lora_rank, h, qk_n),
+                     ("kv_latent", "heads", "head_dim")),
+        "w_uv": Spec((cfg.kv_lora_rank, h, v_hd),
+                     ("kv_latent", "heads", "head_dim")),
+        "wo": Spec((h, v_hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ----------------------------------------------------------- core attention
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      bq: int = 512, bk: int = 1024, kv_len=None,
+                      remat_qblock: bool = False,
+                      causal_skip: bool = False,
+                      p_bf16: bool = False):
+    """Online-softmax blockwise attention, pure JAX.
+
+    q: (B, Sq, H, D), k/v: (B, Skv, KV, D) with H a multiple of KV (GQA).
+    q_offset: global position of q[0] (for causal masking vs. a cache).
+    kv_len: number of valid kv positions (<= Skv), static or traced.
+    remat_qblock: checkpoint each q-block so the backward pass recomputes
+      the (bq x bk) score blocks instead of saving them through the KV scan
+      (flash-attention-style backward; see EXPERIMENTS.md §Perf — the saved
+      score residuals are the dominant memory term of the baseline).
+    causal_skip: unroll the q-block loop in python so each q block scans
+      only its own past KV blocks — halves attention FLOPs and score
+      traffic vs. the masked full grid.  Needs causal, static q_offset == 0
+      and modest nq (HLO grows linearly in nq); falls back otherwise.
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    dv = v.shape[-1]
+    groups = h // kvh
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    nq, nk = -(-sq // bq), -(-skv // bk)
+    pad_q = nq * bq - sq
+    pad_k = nk * bk - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if kv_len is None:
+        kv_len = skv
+    # (B, nq, bq, H, D) -> scan over nq
+    qb = q.reshape(b, nq, bq, h, d).transpose(1, 0, 3, 2, 4)   # (nq,B,H,bq,D)
+    kb = k.reshape(b, nk, bk, kvh, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, bk, kvh, dv).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / (d ** 0.5)
+
+    def q_block(qi, q_i, kb_s, vb_s, n_blocks):
+        q_i = q_i.astype(jnp.float32) * scale               # (B,H,bq,D)
+        qg = q_i.reshape(b, kvh, groups * bq, d)            # group fold
+
+        def kv_block(carry, inp):
+            ki, k_j, v_j = inp
+            m, l, acc = carry
+            s = jnp.einsum("bgqd,bgkd->bgqk", qg,
+                           k_j.astype(jnp.float32))         # (B,KV,g*bq,bk)
+            s4 = s.reshape(b, kvh, groups, bq, bk)
+            qpos = q_offset + qi * bq + jnp.arange(bq)
+            kpos = ki * bk + jnp.arange(bk)
+            live = (kpos < kv_len)[None, :]
+            if causal:
+                live = live & (qpos[:, None] >= kpos[None, :])
+            s4 = jnp.where(live[None, None, None], s4, NEG_INF)
+            s = s4.reshape(b, kvh, groups * bq, bk)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+            if p_bf16:
+                # halve the probability-block HBM traffic; the f32 psum of
+                # l_new keeps the normalizer exact (it-F in §Perf)
+                pv = jnp.einsum("bgqk,bgkd->bgqd", p.astype(jnp.bfloat16),
+                                v_j.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bgqk,bgkd->bgqd", p,
+                                v_j.astype(jnp.float32))
+            acc_new = acc * alpha + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kvh, groups * bq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, groups * bq, 1), jnp.float32),
+                jnp.zeros((b, kvh, groups * bq, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(n_blocks), kb_s, vb_s))
+        out = acc / jnp.maximum(l, 1e-30)
+        return out.reshape(b, kvh, groups, bq, dv).reshape(b, h, bq, dv)
+
+    use_skip = (causal_skip and causal and isinstance(q_offset, int)
+                and q_offset == 0 and nq <= 16)
+    if use_skip:
+        # python-unrolled q blocks, each scanning only its past KV blocks
+        def one(qi, q_i):
+            n_blocks = min(-(-((qi + 1) * bq) // bk), nk)
+            return q_block(qi, q_i, kb[:n_blocks], vb[:n_blocks], n_blocks)
+        fn = jax.checkpoint(one, static_argnums=(0,)) if remat_qblock else one
+        outs = jnp.stack([fn(qi, qb[qi]) for qi in range(nq)])
+    else:
+        def block_fn(qi, q_i):
+            return q_block(qi, q_i, kb, vb, nk)
+        if remat_qblock:
+            block_fn = jax.checkpoint(block_fn)
+        outs = jax.lax.map(lambda args: block_fn(*args),
+                           (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * bq, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """Single-position attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); kv_len: valid length (traced).
+    """
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    dv = v_cache.shape[-1]
+    groups = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, groups, d) / (d ** 0.5)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    live = jnp.arange(s)[None, None, None, :] < kv_len
+    sc = jnp.where(live, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------ GQA attention
+class KVUpdate(NamedTuple):
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
+              causal: bool = True, kv=None, use_pallas: bool = False,
+              remat_qblock: bool = False, shard_heads: bool = False,
+              causal_skip: bool = False, p_bf16: bool = False):
+    """GQA attention.  x: (B, S, d_model).
+
+    cache: optional dict {"k","v"} (B, S_max, KV, D) for decode; ``pos`` is
+    the current decode position (traced scalar).  kv: optional externally
+    provided (k, v) (cross-attention).  Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    else:
+        k, v = kv
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        if kv is None:
+            k = k + p["bk"]
+            v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    if kv is None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if s == 1:
+            out = decode_attention(q, ck, cv, kv_len=pos + s)
+        else:  # multi-token prefill against the cache
+            kk, vv = ck, cv
+            if shard_heads and ck.shape[2] < q.shape[2]:
+                # same head-sharding trick as the train path: the cache
+                # keeps kv_heads, only the compute tensors are repeated
+                groups = q.shape[2] // ck.shape[2]
+                kk = jnp.repeat(ck, groups, axis=2)
+                vv = jnp.repeat(cv, groups, axis=2)
+                q = _maybe_constrain(q, None, None, "model", None)
+                kk = _maybe_constrain(kk, None, None, "model", None)
+                vv = _maybe_constrain(vv, None, None, "model", None)
+            out = chunked_attention(q, kk, vv, causal=causal, q_offset=pos,
+                                    kv_len=pos + s,
+                                    remat_qblock=remat_qblock)
+    elif use_pallas and s <= 32768:
+        from ..kernels import flash_attention
+        groups = q.shape[2] // k.shape[2]
+        kk = jnp.repeat(k, groups, axis=2)
+        vv = jnp.repeat(v, groups, axis=2)
+        out = flash_attention(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                              vv.transpose(0, 2, 1, 3), causal=causal)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        if shard_heads and k.shape[2] < q.shape[2]:
+            # GQA head sharding: kv_heads (e.g. 8) does not divide the
+            # 16-way model axis, which leaves the whole attention replicated
+            # per device.  Repeating KV to the full head count lets GSPMD
+            # shard the n_heads axis (padding if not divisible) — 16x less
+            # attention compute/memory per chip at the price of kv
+            # duplication (EXPERIMENTS.md §Perf).
+            groups = q.shape[2] // k.shape[2]
+            k = jnp.repeat(k, groups, axis=2)
+            v = jnp.repeat(v, groups, axis=2)
+            q = _maybe_constrain(q, None, None, "model", None)
+            k = _maybe_constrain(k, None, None, "model", None)
+            v = _maybe_constrain(v, None, None, "model", None)
+        out = chunked_attention(q, k, v, causal=causal,
+                                remat_qblock=remat_qblock,
+                                causal_skip=causal_skip, p_bf16=p_bf16)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ------------------------------------------------------------ MLA attention
+def mla_attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
+                  remat_qblock: bool = False, shard_heads: bool = False,
+                  causal_skip: bool = False, p_bf16: bool = False):
+    """DeepSeek-V3 multi-head latent attention.
+
+    The cache stores the compressed latent (B, S, kv_lora + rope_dim); K/V
+    are re-expanded per use (the "naive" formulation — the absorbed-matmul
+    decode optimization is a §Perf item, not a correctness one).
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    # queries through the low-rank path
+    q_lat = rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # compressed KV latent + decoupled rope key
+    latent = x @ p["w_dkv"]                       # (B,S,kv_lora+rope)
+    c_kv = rmsnorm(latent[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(latent[..., None, cfg.kv_lora_rank:],
+                        positions, cfg.rope_theta)  # (B,S,1,rope)
+    lat_cat = jnp.concatenate([c_kv, k_rope[..., 0, :]], axis=-1)
+
+    if cache is not None:
+        new_lat = jax.lax.dynamic_update_slice(
+            cache["latent"], lat_cat.astype(cache["latent"].dtype),
+            (0, pos, 0))
+        kv_len = pos + s
+        lat_all = new_lat
+        new_cache = {"latent": new_lat}
+    else:
+        lat_all = lat_cat
+        kv_len = s
+        new_cache = None
+
+    c_all = lat_all[..., :cfg.kv_lora_rank]
+    kr_all = lat_all[..., None, cfg.kv_lora_rank:]          # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uk"])  # (B,S,H,nope)
+    v_all = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uv"])   # (B,S,H,v_hd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(
+            kr_all, k_nope.shape[:3] + (rope_d,))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if shard_heads and cache is None:
+        # MLA has a full per-head K/V after expansion: shard the 128-head
+        # axis directly.
+        q_full = _maybe_constrain(q_full, None, None, "model", None)
+        k_full = _maybe_constrain(k_full, None, None, "model", None)
+        v_all = _maybe_constrain(v_all, None, None, "model", None)
+    if cache is not None and s == 1:
+        out = decode_attention(q_full, k_full, v_all, kv_len=kv_len)
+    elif cache is not None:
+        out = chunked_attention(q_full, k_full, v_all, causal=True,
+                                q_offset=pos, kv_len=kv_len,
+                                remat_qblock=remat_qblock)
+    else:
+        out = chunked_attention(q_full, k_full, v_all, causal=True,
+                                remat_qblock=remat_qblock,
+                                causal_skip=causal_skip, p_bf16=p_bf16)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache

@@ -1,0 +1,164 @@
+"""Shared model machinery: declarative params, norms, RoPE, and the paper's
+approximate-matmul (`amm`) layer.
+
+Parameters are declared once as ``Spec`` entries (shape + logical axes +
+init); both the real initializer and the dry-run's shape/sharding trees are
+derived from the same table, so sharding rules can never drift from shapes.
+
+Logical axis names (mapped to mesh axes by parallel/logical.py):
+  layers, embed, heads, kv_heads, head_dim, mlp, experts, expert_mlp,
+  vocab, kv_latent, q_latent, ssm_inner, ssm_state, ssm_heads, conv, batch,
+  seq, scalar
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AmmConfig
+from ..core.multipliers import MulSpec, mul as core_mul
+from ..core.noise import make_noise_model
+
+__all__ = ["Spec", "init_params", "param_logical_axes", "rmsnorm",
+           "rope_freqs", "apply_rope", "amm_dense", "AmmRuntime",
+           "cross_entropy_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter tensor."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(key, spec: Spec, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale if spec.init == "normal" else 1e-3
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+            ).astype(dtype)
+
+
+def init_params(table: Dict[str, Any], key, dtype=jnp.float32):
+    """Materialize a (possibly nested) dict of Spec into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        table, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_logical_axes(table: Dict[str, Any]):
+    """The same tree with each Spec replaced by its logical axis tuple."""
+    return jax.tree.map(lambda s: s.axes, table,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ---------------------------------------------------------------- numerics
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------- approximate matmul
+@dataclasses.dataclass(frozen=True)
+class AmmRuntime:
+    """Resolved runtime for an AmmConfig: moments from the characterization
+    cache, kept as python floats so they fold into the jaxpr."""
+    cfg: AmmConfig
+    mu: float = 0.0
+    sigma: float = 0.0
+
+    @staticmethod
+    def build(cfg: AmmConfig) -> "AmmRuntime":
+        if cfg.mode != "noise":
+            return AmmRuntime(cfg)
+        spec = MulSpec(cfg.mul, cfg.wl, cfg.param)
+        nm = make_noise_model(spec, sample=1 << 18)
+        return AmmRuntime(cfg, mu=nm.mean, sigma=float(np.sqrt(nm.var)))
+
+
+def _dyn_scale(x, wl: int):
+    lim = float(2 ** (wl - 1) - 1)
+    s = jnp.max(jnp.abs(x)) / lim
+    return jax.lax.stop_gradient(jnp.maximum(s, 1e-12))
+
+
+def amm_dense(x, w, rt: AmmRuntime, key=None):
+    """Matmul over the last axis of x with the paper's technique applied.
+
+    Straight-through estimator: gradients flow through the exact product;
+    the forward value carries the quantization + approximate-multiplier
+    error.  x: (..., K), w: (K, N).
+    """
+    cfg = rt.cfg
+    exact = x @ w
+    if cfg.mode == "off":
+        return exact
+    if cfg.mode == "noise":
+        s_x = _dyn_scale(x, cfg.wl)
+        s_w = _dyn_scale(w, cfg.wl)
+        lim = float(2 ** (cfg.wl - 1) - 1)
+        xq = jnp.round(jnp.clip(x / s_x, -lim - 1, lim)).astype(jnp.float32)
+        wq = jnp.round(jnp.clip(w / s_w, -lim - 1, lim)).astype(jnp.float32)
+        yq = xq @ wq
+        k_len = x.shape[-1]
+        if key is not None and (rt.mu != 0.0 or rt.sigma != 0.0):
+            z = jax.random.normal(key, yq.shape, jnp.float32)
+            yq = yq + rt.mu * k_len + rt.sigma * (k_len ** 0.5) * z
+        approx = (yq * (s_x * s_w)).astype(x.dtype)
+        return exact + jax.lax.stop_gradient(approx - exact)
+    if cfg.mode == "bitexact":
+        spec = MulSpec(cfg.mul, cfg.wl, cfg.param)
+        s_x = _dyn_scale(x, cfg.wl)
+        s_w = _dyn_scale(w, cfg.wl)
+        lim = 2 ** (cfg.wl - 1) - 1
+        xq = jnp.clip(jnp.round(x / s_x), -lim - 1, lim).astype(jnp.int32)
+        wq = jnp.clip(jnp.round(w / s_w), -lim - 1, lim).astype(jnp.int32)
+        prod = core_mul(spec)(xq[..., :, None], wq[None, :, :])
+        yq = jnp.sum(prod.astype(jnp.float32), axis=-2)
+        approx = (yq * (s_x * s_w)).astype(x.dtype)
+        return exact + jax.lax.stop_gradient(approx - exact)
+    raise ValueError(f"unknown amm mode {cfg.mode!r}")
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy_loss(logits, labels, *, z_loss: float = 1e-4):
+    """Mean token cross entropy (fp32 logsumexp) + optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

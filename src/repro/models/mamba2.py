@@ -1,0 +1,212 @@
+"""Mamba2 SSD (state-space duality) block, chunked matmul formulation.
+
+Follows Dao & Gu (arXiv:2405.21060): within a chunk of length Q the output
+is an attention-like masked matmul (MXU-friendly); across chunks a small
+(H, P, N) state is carried by a linear recurrence (lax.scan).  A sequential
+per-step reference (`ssd_reference`) backs the tests, and `ssd_decode_step`
+is the O(1) per-token serving path — the reason the long_500k shape runs for
+SSM/hybrid archs only.
+
+Shapes: x (B, L, H, P) values; dt (B, L, H) positive step sizes;
+A (H,) negative decay rates; B_, C_ (B, L, G, N) in/out projections
+(G groups broadcast over H); D (H,) skip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import Spec
+
+__all__ = ["mamba_table", "mamba_apply", "mamba_decode_step",
+           "ssd_chunked", "ssd_reference", "ssd_decode_step"]
+
+
+# ------------------------------------------------------------------ params
+def mamba_table(cfg: ArchConfig) -> Dict[str, Spec]:
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": Spec((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner")),
+        "conv_w": Spec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner"),
+                       "normal", 0.2),
+        "conv_b": Spec((conv_dim,), ("ssm_inner",), "zeros"),
+        "a_log": Spec((h,), ("ssm_heads",), "ones"),
+        "dt_bias": Spec((h,), ("ssm_heads",), "zeros"),
+        "d_skip": Spec((h,), ("ssm_heads",), "ones"),
+        "norm_w": Spec((di,), ("ssm_inner",), "ones"),
+        "out_proj": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+# ------------------------------------------------------------------- SSD
+def ssd_chunked(x, dt, A, B_, C_, D, *, chunk: int):
+    """Chunked SSD scan.  Returns (y, final_state).
+
+    x: (B,L,H,P); dt: (B,L,H); A: (H,); B_/C_: (B,L,G,N); D: (H,)
+    state: (B,H,P,N)
+    """
+    b, l, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    nc = l // q
+    rep = h // g
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = jnp.repeat(B_.reshape(b, nc, q, g, n), rep, axis=3)   # (b,nc,q,h,n)
+    cr = jnp.repeat(C_.reshape(b, nc, q, g, n), rep, axis=3)
+
+    dA = dtr * A                                               # (b,nc,q,h) <0
+    cum = jnp.cumsum(dA, axis=2)                               # within chunk
+
+    # ---- intra-chunk (attention-like) term
+    # L[i,j] = exp(cum_i - cum_j) for i >= j (decay from j+1..i)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    lmat = jnp.where(mask, jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cr, br)          # (b,nc,q,q,h)
+    w = scores * lmat * dtr[:, :, None, :, :]                  # dt_j weight
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xr)
+
+    # ---- chunk states: S_c = sum_j exp(cumQ - cum_j) dt_j B_j (x) x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (b,nc,q,h)
+    sb = br * (decay_end * dtr)[..., None]                     # (b,nc,q,h,n)
+    s_c = jnp.einsum("bcjhn,bcjhp->bchpn", sb, xr)             # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (b,nc,h)
+
+    # ---- inter-chunk recurrence
+    def step(hstate, inp):
+        s_chunk, dec = inp                                     # (b,h,p,n),(b,h)
+        new = hstate * dec[:, :, None, None] + s_chunk
+        return new, hstate                                     # emit prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, h_prev = jax.lax.scan(
+        step, init,
+        (s_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # (b,nc,h,p,n)
+
+    # ---- inter-chunk output: C_i . (h_prev * decay_to_i)
+    dec_in = jnp.exp(cum)                                      # (b,nc,q,h)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp",
+                         cr * dec_in[..., None], h_prev)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x * D[None, None, :, None]
+    return y, final
+
+
+def ssd_reference(x, dt, A, B_, C_, D):
+    """Sequential per-step oracle: h_t = h_{t-1} exp(dt_t A) + dt_t B_t x_t."""
+    b, l, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    br = jnp.repeat(B_, rep, axis=2)
+    cr = jnp.repeat(C_, rep, axis=2)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp                 # (b,h,p),(b,h),(b,h,n),(b,h,n)
+        dec = jnp.exp(dtt * A)                # (b,h)
+        hnew = (hstate * dec[..., None, None]
+                + jnp.einsum("bhn,bhp->bhpn", bt * dtt[..., None], xt))
+        y = jnp.einsum("bhn,bhpn->bhp", ct, hnew)
+        return hnew, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, init,
+                         (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                          br.transpose(1, 0, 2, 3), cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    return y + x * D[None, None, :, None]
+
+
+def ssd_decode_step(state, xt, dtt, A, bt, ct, D):
+    """One-token state update.  state (B,H,P,N) -> (y_t, new_state)."""
+    dec = jnp.exp(dtt * A)
+    new = (state * dec[..., None, None]
+           + jnp.einsum("bhn,bhp->bhpn", bt * dtt[..., None], xt))
+    y = jnp.einsum("bhn,bhpn->bhp", ct, new) + xt * D[None, :, None]
+    return y, new
+
+
+# ------------------------------------------------------------ full block
+def _causal_conv(xbc, w, b_, conv_state=None):
+    """Depthwise causal conv over (B, L, C) with kernel (K, C).
+
+    conv_state: (B, K-1, C) history for decode; returns (y, new_state).
+    """
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, xbc], axis=1)
+    new_state = pad[:, -(k - 1):] if k > 1 else None
+    y = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(y + b_), new_state
+
+
+def _split_proj(proj, cfg: ArchConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * n]
+    dt_raw = proj[..., -h:]
+    return z, xbc, dt_raw
+
+
+def mamba_apply(p, x, cfg: ArchConfig, *, state=None, conv_state=None):
+    """Full Mamba2 block.  x: (B, S, d_model).
+
+    Training/prefill: state/conv_state None -> chunked scan.
+    Decode: pass (state, conv_state), S == 1.
+    Returns (y, (new_state, new_conv_state)).
+    """
+    b, s, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    if state is not None and s > 1:
+        # multi-token prefill: run the chunked scan from zero state (the
+        # cache is being filled from position 0)
+        state, conv_state = None, None
+        prefill = True
+    else:
+        prefill = False
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(b, s, h, pdim)
+    b_ = xbc[..., di:di + g * n].reshape(b, s, g, n)
+    c_ = xbc[..., di + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if state is None:
+        y, new_state = ssd_chunked(xs.astype(jnp.float32),
+                                   dt.astype(jnp.float32), A,
+                                   b_.astype(jnp.float32),
+                                   c_.astype(jnp.float32),
+                                   p["d_skip"].astype(jnp.float32),
+                                   chunk=min(cfg.ssm_chunk, s))
+    else:
+        rep = h // g
+        bt = jnp.repeat(b_[:, 0], rep, axis=1)
+        ct = jnp.repeat(c_[:, 0], rep, axis=1)
+        y1, new_state = ssd_decode_step(
+            state, xs[:, 0].astype(jnp.float32), dt[:, 0].astype(jnp.float32),
+            A, bt.astype(jnp.float32), ct.astype(jnp.float32),
+            p["d_skip"].astype(jnp.float32))
+        y = y1[:, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMSNorm (mamba2 style)
+    from .common import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_state, new_conv)
+
+
+def mamba_decode_step(p, x, cfg, state, conv_state):
+    return mamba_apply(p, x, cfg, state=state, conv_state=conv_state)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts block with sort-based capacity dispatch.
+
+Dispatch is the standard dropping formulation: tokens are routed to their
+top-k experts, each expert processes at most ``capacity`` tokens
+(capacity_factor * k * T / E), overflow tokens lose that expert's
+contribution.  Implemented with sort/cumsum/scatter only — no (T, E, C)
+one-hot tensors — so it scales to 256 experts x 1M tokens and shards with
+experts on the "model" mesh axis (expert parallelism; XLA inserts the
+all-to-alls at the dispatch/combine boundaries).
+
+The router follows DeepSeek-V3: sigmoid affinities, top-k, normalized
+weights, plus an auxiliary load-balance loss (Switch-style) returned to the
+caller.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import Spec
+
+__all__ = ["moe_table", "moe_apply", "mlp_table", "mlp_apply"]
+
+
+def mlp_table(d_model: int, d_ff: int, prefix_axes=("embed", "mlp")) -> Dict:
+    a_in, a_out = prefix_axes
+    return {
+        "w_gate": Spec((d_model, d_ff), (a_in, a_out)),
+        "w_up": Spec((d_model, d_ff), (a_in, a_out)),
+        "w_down": Spec((d_ff, d_model), (a_out, a_in)),
+    }
+
+
+def mlp_apply(p, x, amm=None, key=None):
+    from .common import amm_dense
+    if amm is not None and amm.cfg.mode != "off":
+        g = amm_dense(x, p["w_gate"], amm, key)
+        u = amm_dense(x, p["w_up"], amm, key)
+        h = jax.nn.silu(g) * u
+        return amm_dense(h, p["w_down"], amm, key)
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def moe_table(cfg: ArchConfig) -> Dict[str, Spec]:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    t = {
+        "router": Spec((d, e), ("embed", "experts"), "normal", 0.006),
+        "w_gate": Spec((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_up": Spec((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_down": Spec((e, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        t["shared"] = mlp_table(d, sff)
+    return t
+
+
+def _dispatch(expert_ids, top_k: int, n_tokens: int, n_experts: int,
+              capacity: int):
+    """Build gather indices from flat (T*k,) routing decisions.
+
+    Returns (slot_token, token_slot):
+      slot_token: (E*C,) *token* index feeding each expert slot (T = pad)
+      token_slot: (T*k,) slot index each routing decision landed in (E*C =
+                  dropped/pad)
+    """
+    tk = expert_ids.shape[0]
+    # decisions sorted by expert, stable -> token order within expert
+    order = jnp.argsort(expert_ids, stable=True)               # (T*k,)
+    sorted_e = expert_ids[order]
+    # rank within expert = sorted index - start offset of that expert
+    counts = jnp.bincount(expert_ids, length=n_experts)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    rank = jnp.arange(tk) - starts[sorted_e]                   # (T*k,)
+    keep = rank < capacity
+    nc = n_experts * capacity
+    slot = sorted_e * capacity + jnp.minimum(rank, capacity - 1)
+    oob = jnp.where(keep, slot, nc)            # out-of-bounds -> dropped
+    # scatter token ids into slots (mode="drop" discards overflow)
+    slot_token = jnp.full((nc,), n_tokens, jnp.int32)
+    slot_token = slot_token.at[oob].set(
+        (order // top_k).astype(jnp.int32), mode="drop")
+    token_slot = jnp.full((tk,), nc, jnp.int32)
+    token_slot = token_slot.at[order.astype(jnp.int32)].set(
+        oob.astype(jnp.int32))
+    return slot_token, token_slot
+
+
+def moe_apply(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25,
+              amm=None, key=None,
+              gather_weights: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Decode (s == 1) runs dropless (capacity = T): a decode step must not
+    lose expert contributions to capacity, and the buffers are tiny there.
+
+    gather_weights: constrain expert weights to P("model", None, None)
+    before the expert einsums.  Under FSDP rules the weights' d axis is
+    sharded over "data", and GSPMD resolves the contraction by ALL-REDUCING
+    the (E, C, d_ff) partial products — tens of GB of f32 per layer (the
+    dominant collective term of the MoE baselines, EXPERIMENTS.md §Perf
+    it-D).  Gathering the weights instead moves ~30x fewer bytes.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    if s == 1:
+        capacity_factor = e / k        # capacity == t: no drops
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.sigmoid(logits)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    sprobs = jax.nn.softmax(logits, axis=-1)
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(frac_routed * jnp.mean(sprobs, axis=0))
+
+    capacity = max(int(capacity_factor * k * t / e), 1)
+    flat_e = gate_idx.reshape(-1)                              # (T*k,)
+    slot_token, token_slot = _dispatch(flat_e, k, t, e, capacity)
+
+    # gather tokens into (E, C, d), run experts batched, gather back
+    xg = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xe = xg[slot_token].reshape(e, capacity, d)
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if gather_weights:
+        from .attention import _maybe_constrain
+        if e % 16 == 0:              # EP: experts carry the model axis
+            ax_up, ax_down = ("model", None, None), ("model", None, None)
+        else:                        # TP-experts (grok: 8 experts, 16-way)
+            ax_up, ax_down = (None, None, "model"), (None, "model", None)
+        w_gate = _maybe_constrain(w_gate, *ax_up)
+        w_up = _maybe_constrain(w_up, *ax_up)
+        w_down = _maybe_constrain(w_down, *ax_down)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", xe, w_up)
+    h = h.astype(xe.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)                 # (E,C,d)
+    yflat = jnp.concatenate(
+        [ye.reshape(e * capacity, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    per_decision = yflat[token_slot].reshape(t, k, d)          # (T,k,d)
+    y = jnp.einsum("tkd,tk->td", per_decision,
+                   gate_vals.astype(per_decision.dtype))
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xf, amm, key)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation axis carries a *logical* name; rules map logical
+names to mesh axes.  GSPMD pads non-divisible dimensions (e.g. 14 query
+heads on a 16-way "model" axis), so one rule set serves all ten assigned
+architectures on the fixed production mesh.
+
+Rule sets:
+  RULES               single-pod (data, model)
+  RULES_MULTIPOD      two-pod (pod, data, model): batch gains the pod axis,
+                      parameters stay pod-replicated (data-parallel pods)
+  OPT_RULES(_MULTIPOD) optimizer-state rules: identical except the "embed"
+                      axis also shards over the pod axis (ZeRO across pods —
+                      optimizer state is the memory hog at 671B)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["RULES", "RULES_MULTIPOD", "OPT_RULES", "OPT_RULES_MULTIPOD",
+           "spec_to_pspec", "tree_shardings", "logical_sharding",
+           "batch_pspec", "is_multipod"]
+
+RULES: Dict[Optional[str], Any] = {
+    "batch": "data",
+    "seq": None,
+    "embed": "data",          # FSDP: weight embed axis sharded over data
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",       # expert parallelism
+    "expert_mlp": None,
+    "vocab": "model",
+    "q_latent": "model",
+    "kv_latent": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    None: None,
+}
+
+RULES_MULTIPOD = dict(RULES, batch=("pod", "data"))
+OPT_RULES = dict(RULES)
+OPT_RULES_MULTIPOD = dict(RULES_MULTIPOD, embed=("pod", "data"))
+
+# When a primary axis cannot shard (non-divisible, e.g. grok's 8 experts on
+# a 16-way model axis), a fallback logical axis of the same spec may claim
+# the freed mesh axis: TP-experts instead of EP (it-E in EXPERIMENTS §Perf).
+FALLBACK_RULES: Dict[str, Any] = {
+    "expert_mlp": "model",
+}
+
+
+def is_multipod(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+def spec_to_pspec(axes: Tuple[Optional[str], ...], rules: Dict,
+                  shape: Optional[Tuple[int, ...]] = None,
+                  mesh: Optional[Mesh] = None) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    When ``shape``/``mesh`` are given, every candidate mesh axis must evenly
+    divide its dimension; non-divisible axes are dropped (replicated) —
+    pjit's explicit in_shardings reject uneven sharding, and this is what
+    makes one rule set serve qwen2's 14 heads and the long_500k batch of 1
+    on the same 16x16 mesh.
+    """
+    entries = []
+    used = set()
+    for i, a in enumerate(axes):
+        r = rules.get(a, None)
+        if r is None:
+            entries.append(None)
+            continue
+        rr = tuple(r) if isinstance(r, (tuple, list)) else (r,)
+        # a mesh axis may appear only once per spec; later dims fall back
+        # to replication (e.g. (experts->model, embed->data, mlp->None))
+        rr = tuple(x for x in rr if x not in used)
+        if shape is not None and mesh is not None:
+            keep = []
+            rem = shape[i]
+            for ax in rr:
+                sz = mesh.shape[ax]
+                if rem % sz == 0:
+                    keep.append(ax)
+                    rem //= sz
+            rr = tuple(keep)
+        used.update(rr)
+        entries.append(rr if len(rr) > 1 else (rr[0] if rr else None))
+    # second pass: fallback axes may claim mesh axes freed by non-divisible
+    # primaries (e.g. expert_mlp takes "model" when 8 experts can't)
+    for i, a in enumerate(axes):
+        fb = FALLBACK_RULES.get(a)
+        if fb is None or entries[i] is not None or fb in used:
+            continue
+        if shape is not None and mesh is not None \
+                and shape[i] % mesh.shape[fb] != 0:
+            continue
+        entries[i] = fb
+        used.add(fb)
+    return P(*entries)
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: Optional[Dict] = None,
+                   shapes_tree=None):
+    """Map a tree of logical-axis tuples to NamedShardings.
+
+    shapes_tree: optional matching tree of objects with ``.shape`` (Specs or
+    ShapeDtypeStructs) enabling the divisibility check.
+    """
+    if rules is None:
+        rules = RULES_MULTIPOD if is_multipod(mesh) else RULES
+    is_axes = lambda x: isinstance(x, tuple)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, spec_to_pspec(axes, rules)),
+            axes_tree, is_leaf=is_axes)
+    return jax.tree.map(
+        lambda axes, s: NamedSharding(
+            mesh, spec_to_pspec(axes, rules, tuple(s.shape), mesh)),
+        axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def logical_sharding(mesh: Mesh, *axes, rules: Optional[Dict] = None,
+                     shape=None):
+    if rules is None:
+        rules = RULES_MULTIPOD if is_multipod(mesh) else RULES
+    return NamedSharding(mesh, spec_to_pspec(tuple(axes), rules, shape, mesh))
+
+
+def batch_pspec(mesh: Mesh, batch: Optional[int] = None) -> P:
+    axes = ("pod", "data") if is_multipod(mesh) else ("data",)
+    if batch is not None:
+        keep = []
+        rem = batch
+        for ax in axes:
+            if rem % mesh.shape[ax] == 0:
+                keep.append(ax)
+                rem //= mesh.shape[ax]
+        axes = tuple(keep)
+    if not axes:
+        return P(None)
+    return P(axes if len(axes) > 1 else axes[0])

@@ -1,0 +1,168 @@
+"""Serving engine: prefill + decode steps and a slot-based batch scheduler.
+
+``make_serve_fns`` builds the two jitted entry points the dry-run lowers:
+
+  prefill_fn(params, tokens, caches)        -> (logits_last, caches)
+  decode_fn(params, tokens_1, caches, pos)  -> (logits, caches)
+
+The KV caches are sharded by logical rules (batch over data, kv_heads over
+model, MLA latent over seq on model — see parallel/logical.py), and decode
+donates the cache buffers so each step updates in place.
+
+``Scheduler`` is a minimal continuous-batching loop for the serving example:
+fixed slot count, requests enter free slots, finished slots are recycled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import ModelRuntime, init_cache, lm_apply
+from ..parallel.logical import (RULES, RULES_MULTIPOD, batch_pspec,
+                                is_multipod, spec_to_pspec, tree_shardings)
+
+__all__ = ["cache_logical_axes", "make_serve_fns", "Scheduler"]
+
+
+def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical axes for every cache leaf (mirrors models.init_cache)."""
+    if cfg.family in ("dense", "vlm", "audio"):
+        kvax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        c = {"k": kvax, "v": kvax}
+        if cfg.is_encoder_decoder:
+            c["xk"] = kvax
+            c["xv"] = kvax
+        return c
+    if cfg.family == "moe":
+        if cfg.use_mla:
+            # no head axis to shard: shard the *sequence* over model
+            return {"latent": ("layers", "batch", "seq_model", "kv_latent")}
+        kvax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        return {"k": kvax, "v": kvax}
+    if cfg.family == "ssm":
+        return {"ssm": ("layers", "batch", "ssm_heads", "head_dim",
+                        "ssm_state"),
+                "conv": ("layers", "batch", "conv", "ssm_inner")}
+    if cfg.family == "hybrid":
+        return {"ssm": ("layers", None, "batch", "ssm_heads", "head_dim",
+                        "ssm_state"),
+                "conv": ("layers", None, "batch", "conv", "ssm_inner"),
+                "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+                "v": ("layers", "batch", "seq", "kv_heads", "head_dim")}
+    raise ValueError(cfg.family)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
+    from ..models import init_cache
+    rules = dict(RULES_MULTIPOD if is_multipod(mesh) else RULES)
+    rules["seq_model"] = "model"
+    structs = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.tree.map(
+        lambda axes, st: NamedSharding(
+            mesh, spec_to_pspec(axes, rules, tuple(st.shape), mesh)),
+        cache_logical_axes(cfg), structs,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
+                   batch: int, max_len: int):
+    """(prefill_fn, decode_fn) jitted with explicit shardings."""
+    from ..models import lm_logical_axes, lm_table
+    p_rules = RULES_MULTIPOD if is_multipod(mesh) else RULES
+    p_sh = tree_shardings(lm_logical_axes(cfg), mesh, p_rules,
+                          shapes_tree=lm_table(cfg))
+    c_sh = cache_shardings(cfg, mesh, batch, max_len)
+    b_sh = NamedSharding(mesh, batch_pspec(mesh, batch))
+    scalar = NamedSharding(mesh, P())
+
+    def prefill(params, tokens, caches, encoder_embeds=None):
+        logits, _, new_caches = lm_apply(
+            params, cfg, rt, tokens, mode="decode", caches=caches,
+            pos=jnp.int32(0), encoder_embeds=encoder_embeds)
+        return logits[:, -1], new_caches
+
+    def decode(params, tokens, caches, pos, encoder_embeds=None):
+        logits, _, new_caches = lm_apply(
+            params, cfg, rt, tokens, mode="decode", caches=caches, pos=pos,
+            encoder_embeds=encoder_embeds)
+        return logits[:, -1], new_caches
+
+    enc_sh = (b_sh,) if cfg.is_encoder_decoder else ()
+    prefill_j = jax.jit(prefill, in_shardings=(p_sh, b_sh, c_sh) + enc_sh,
+                        out_shardings=(b_sh, c_sh))
+    decode_j = jax.jit(decode,
+                       in_shardings=(p_sh, b_sh, c_sh, scalar) + enc_sh,
+                       out_shardings=(b_sh, c_sh),
+                       donate_argnums=(2,))
+    return prefill_j, decode_j
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    """Slot-based continuous batching over the jitted decode step."""
+
+    def __init__(self, cfg: ArchConfig, rt: ModelRuntime, params,
+                 batch_slots: int, max_len: int, decode_fn=None):
+        self.cfg, self.rt, self.params = cfg, rt, params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.max_len = max_len
+        self.caches = init_cache(cfg, batch_slots, max_len)
+        self.queue: List[Request] = []
+        self.decode_fn = decode_fn
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.pos[i] = 0
+                req._pending = list(req.prompt)     # tokens still to feed
+
+    def step(self) -> int:
+        """One decode step over all live slots; returns #live requests."""
+        self._admit()
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return 0
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            toks[i, 0] = (s._pending.pop(0) if s._pending
+                          else (s.out[-1] if s.out else 0))
+        pos = int(self.pos[live[0]])   # homogeneous-pos simplification
+        fn = self.decode_fn or (lambda p, t, c, q: (
+            lm_apply(p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
+                     caches=c, pos=jnp.int32(q))[0][:, -1],
+            lm_apply(p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
+                     caches=c, pos=jnp.int32(q))[2]))
+        logits, self.caches = fn(self.params, jnp.asarray(toks),
+                                 self.caches, jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            s = self.slots[i]
+            self.pos[i] += 1
+            if not s._pending:          # past the prompt: emit
+                s.out.append(int(nxt[i]))
+                if len(s.out) >= s.max_new or self.pos[i] >= self.max_len - 1:
+                    s.done = True
+                    self.slots[i] = None
+        return len(live)

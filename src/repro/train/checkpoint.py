@@ -1,0 +1,163 @@
+"""Sharded checkpointing: manifest + per-leaf .npy, async writer, elastic
+restore (a checkpoint written on mesh A loads onto mesh B — the host arrays
+are resharded by device_put against B's shardings).
+
+Layout:
+    <dir>/step_000123/
+        MANIFEST.json        {step, leaf paths, dtypes, shapes, done: true}
+        <leaf-key>.npy
+The ``done`` flag is written last — a crash mid-write leaves a restorable
+previous checkpoint (restore picks the newest *complete* step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "gc_old"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_name(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def _to_savable(arr: np.ndarray):
+    """numpy can't round-trip ml_dtypes (bf16 etc) — store a u16/u8 view."""
+    if arr.dtype.kind not in "fiub" or str(arr.dtype) in (
+            "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        itemsize = arr.dtype.itemsize
+        view_dtype = {1: np.uint8, 2: np.uint16, 4: np.uint32}[itemsize]
+        return arr.view(view_dtype), str(arr.dtype)
+    return arr, str(arr.dtype)
+
+
+def _from_savable(arr: np.ndarray, dtype_str: str):
+    if str(arr.dtype) != dtype_str:
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_str)))
+    return arr
+
+
+def save(tree, step: int, ckpt_dir: str, *, keep: int = 3) -> str:
+    """Synchronous checkpoint write.  Returns the step directory."""
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    names = []
+    logical_dtypes = []
+    for i, arr in enumerate(host):
+        savable, dts = _to_savable(arr)
+        logical_dtypes.append(dts)
+        np.save(os.path.join(tmp, _leaf_name(i)), savable)
+        names.append(_leaf_name(i))
+    manifest = {
+        "step": step,
+        "leaves": names,
+        "treedef": str(treedef),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": logical_dtypes,
+        "done": True,
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    gc_old(ckpt_dir, keep=keep)
+    return d
+
+
+_pending: list = []
+
+
+def save_async(tree, step: int, ckpt_dir: str, *, keep: int = 3):
+    """Fire-and-forget checkpoint on a writer thread (device_get happens on
+    the caller thread so the arrays are snapshot-consistent)."""
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    snapshot = jax.tree.unflatten(treedef, host)
+    t = threading.Thread(target=save, args=(snapshot, step, ckpt_dir),
+                         kwargs={"keep": keep}, daemon=True)
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _pending:
+        t.join()
+    _pending.clear()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        mf = os.path.join(ckpt_dir, name, "MANIFEST.json")
+        if not os.path.exists(mf):
+            continue
+        try:
+            if json.load(open(mf)).get("done"):
+                s = int(m.group(1))
+                best = s if best is None else max(best, s)
+        except (json.JSONDecodeError, OSError):
+            continue
+    return best
+
+
+def restore(tree_like, ckpt_dir: str, *, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    shardings: optional matching tree of NamedShardings — this is the
+    elastic-rescale path: host arrays are device_put against the *new*
+    mesh's shardings regardless of what mesh wrote them.
+    Returns (tree, step) or (None, None) if nothing to restore.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    manifest = json.load(open(os.path.join(d, "MANIFEST.json")))
+    leaves, treedef = _flatten(tree_like)
+    assert len(leaves) == len(manifest["leaves"]), \
+        "checkpoint/model structure mismatch"
+    host = [_from_savable(np.load(os.path.join(d, n)), dt)
+            for n, dt in zip(manifest["leaves"], manifest["dtypes"])]
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        host = [jax.device_put(a, s) for a, s in zip(host, sh_leaves)]
+    else:
+        host = [jax.numpy.asarray(a) for a in host]
+    return jax.tree.unflatten(treedef, host), step
+
+
+def gc_old(ckpt_dir: str, *, keep: int = 3):
+    steps = []
+    if not os.path.isdir(ckpt_dir):
+        return
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    for s in sorted(steps)[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"),
+                      ignore_errors=True)

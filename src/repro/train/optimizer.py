@@ -1,0 +1,150 @@
+"""Optimizers (AdamW, Adafactor-lite) + schedules, pure JAX pytrees.
+
+Optimizer state dtype is configurable: fp32 (default) or bf16 ("quantized
+optimizer state" — halves the dominant memory term at 671B; see
+EXPERIMENTS.md §Perf memory iterations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "init_opt", "apply_updates",
+           "warmup_cosine", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init_opt(params, cfg: OptConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    if cfg.kind == "adafactor":
+        # factored second moment: row/col accumulators for >=2D params
+        def fac(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], cfg.state_dtype),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                  cfg.state_dtype))
+            return jnp.zeros(p.shape, cfg.state_dtype)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros, params),
+                        jax.tree.map(fac, params))
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params))
+
+
+def warmup_cosine(cfg: OptConfig):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm,
+                                  0.1 + 0.9 * cos)
+    return sched
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig
+                  ) -> Tuple[Any, OptState, dict]:
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = warmup_cosine(cfg)(step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    if cfg.kind == "adafactor":
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                vr, vc = v
+                vr32 = (cfg.b2 * vr.astype(jnp.float32)
+                        + (1 - cfg.b2) * jnp.mean(g32 * g32, axis=-1))
+                vc32 = (cfg.b2 * vc.astype(jnp.float32)
+                        + (1 - cfg.b2) * jnp.mean(g32 * g32, axis=-2))
+                rms = jnp.sqrt(
+                    vr32[..., :, None] * vc32[..., None, :]
+                    / jnp.maximum(jnp.mean(vr32, axis=-1,
+                                           keepdims=True)[..., None], 1e-30))
+                upd_ = g32 / jnp.maximum(jnp.sqrt(rms), cfg.eps)
+                new_v = (vr32.astype(cfg.state_dtype),
+                         vc32.astype(cfg.state_dtype))
+            else:
+                v32 = (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2)
+                       * g32 * g32)
+                upd_ = g32 / (jnp.sqrt(v32 / bc2) + cfg.eps)
+                new_v = v32.astype(cfg.state_dtype)
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * upd_
+            newp = (p.astype(jnp.float32) - lr * (m32 / bc1)
+                    - lr * cfg.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), m32.astype(cfg.state_dtype), new_v
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v,
+                           is_leaf=lambda x: isinstance(x, tuple)
+                           and not isinstance(x, jax.Array))
+        newp = jax.tree.map(lambda t3: t3[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3)
+        newm = jax.tree.map(lambda t3: t3[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3)
+        newv = jax.tree.map(lambda t3: t3[2], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3)
+        return newp, OptState(step, newm, newv), {"lr": lr, "gnorm": gnorm}
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        newp = (p.astype(jnp.float32) - lr * u
+                - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m32.astype(cfg.state_dtype), \
+            v32.astype(cfg.state_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    res = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = tdef.unflatten([r[0] for r in res])
+    newm = tdef.unflatten([r[1] for r in res])
+    newv = tdef.unflatten([r[2] for r in res])
+    return newp, OptState(step, newm, newv), {"lr": lr, "gnorm": gnorm}

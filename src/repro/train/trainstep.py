@@ -1,0 +1,140 @@
+"""Distributed train step: microbatched grad accumulation + AdamW update.
+
+The step is a single jit-compiled function whose in/out shardings come from
+the logical rules (parallel/logical.py):
+
+  * params/opt-state sharded by their logical axes (FSDP embed axis over
+    data, TP over model, opt state additionally over pod),
+  * the batch sharded over (pod, data),
+  * gradient accumulation over ``microbatches`` via lax.scan (activation
+    memory / microbatches),
+  * remat on the layer scan (ModelRuntime.remat),
+  * donate_argnums on (params, opt_state) so XLA reuses their buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import ModelRuntime, lm_loss, lm_logical_axes
+from ..parallel.logical import (OPT_RULES, OPT_RULES_MULTIPOD, RULES,
+                                RULES_MULTIPOD, batch_pspec, is_multipod,
+                                tree_shardings)
+from .optimizer import OptConfig, OptState, apply_updates, init_opt
+
+__all__ = ["TrainConfig", "make_train_step", "train_step_shardings",
+           "loss_and_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    param_dtype: Any = jnp.float32
+
+
+def loss_and_grads(params, cfg: ArchConfig, rt: ModelRuntime, tokens,
+                   labels, rng, *, microbatches: int = 1,
+                   encoder_embeds=None):
+    """Microbatched mean loss + grads via scan accumulation."""
+    def lf(p, tb, lb, key, enc):
+        total, metrics = lm_loss(p, cfg, rt, tb, lb, rng=key,
+                                 encoder_embeds=enc)
+        return total, metrics
+
+    if microbatches == 1:
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            params, tokens, labels, rng, encoder_embeds)
+        return loss, grads, metrics
+
+    b = tokens.shape[0]
+    assert b % microbatches == 0
+    mb = b // microbatches
+    tok_mb = tokens.reshape(microbatches, mb, -1)
+    lab_mb = labels.reshape(microbatches, mb, -1)
+    enc_mb = (encoder_embeds.reshape((microbatches, mb)
+                                     + encoder_embeds.shape[1:])
+              if encoder_embeds is not None else None)
+    keys = jax.random.split(rng, microbatches)
+
+    def body(carry, xs):
+        loss_acc, grad_acc = carry
+        tb, lb, key, enc = xs
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            params, tb, lb, key, enc)
+        grad_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                grad_acc, grads)
+        return (loss_acc + loss, grad_acc), metrics
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads), metrics = jax.lax.scan(
+        body, (jnp.float32(0.0), zero_grads),
+        (tok_mb, lab_mb, keys, enc_mb))
+    inv = 1.0 / microbatches
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum * inv, grads, metrics
+
+
+def train_step_shardings(cfg: ArchConfig, mesh: Mesh,
+                         global_batch: Optional[int] = None):
+    """(param_shardings, opt_shardings, batch_sharding) for the mesh."""
+    from ..models import lm_table
+    axes = lm_logical_axes(cfg)
+    table = lm_table(cfg)
+    mp = is_multipod(mesh)
+    p_rules = RULES_MULTIPOD if mp else RULES
+    o_rules = OPT_RULES_MULTIPOD if mp else OPT_RULES
+    p_sh = tree_shardings(axes, mesh, p_rules, shapes_tree=table)
+    o_sh = tree_shardings(axes, mesh, o_rules, shapes_tree=table)
+    b_sh = NamedSharding(mesh, batch_pspec(mesh, global_batch))
+    return p_sh, o_sh, b_sh
+
+
+def make_train_step(cfg: ArchConfig, rt: ModelRuntime, tc: TrainConfig,
+                    mesh: Mesh, *, with_encoder: bool = False,
+                    global_batch: Optional[int] = None):
+    """Build the jitted train step with explicit in/out shardings."""
+    p_sh, o_sh, b_sh = train_step_shardings(cfg, mesh, global_batch)
+    opt_sh = OptState(NamedSharding(mesh, P()), o_sh, o_sh)
+    rng_sh = NamedSharding(mesh, P())
+
+    def step(params, opt_state, tokens, labels, rng, encoder_embeds=None):
+        loss, grads, metrics = loss_and_grads(
+            params, cfg, rt, tokens, labels, rng,
+            microbatches=tc.microbatches, encoder_embeds=encoder_embeds)
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, opt_state, tc.opt)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    in_sh = [p_sh, opt_sh, b_sh, b_sh, rng_sh]
+    if with_encoder:
+        in_sh.append(b_sh)
+    metrics_sh = None  # let xla choose for the scalar dict
+    return jax.jit(
+        step,
+        in_shardings=tuple(in_sh),
+        out_shardings=(p_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def init_train_state(cfg: ArchConfig, tc: TrainConfig, mesh: Mesh, key):
+    """Host-side init then device_put with the target shardings."""
+    from ..models import lm_init
+    p_sh, o_sh, _ = train_step_shardings(cfg, mesh)
+    params = lm_init(cfg, key, tc.param_dtype)
+    params = jax.device_put(params, p_sh)
+    opt = init_opt(params, tc.opt)
+    opt = OptState(jax.device_put(opt.step, NamedSharding(mesh, P())),
+                   jax.device_put(opt.m, o_sh),
+                   jax.device_put(opt.v, o_sh))
+    return params, opt

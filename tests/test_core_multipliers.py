@@ -1,0 +1,192 @@
+"""Unit + property tests for the core approximate-multiplier arithmetic."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bam_mul, bbm_type0, bbm_type1, booth_mul_exact,
+                        booth_digits, kulkarni_mul, to_signed, MulSpec, mul)
+from repro.core.ref_sim import bam_ref, bbm_ref, kulkarni_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_ops(wl, n=256):
+    return (RNG.integers(0, 1 << wl, n).astype(np.int32),
+            RNG.integers(0, 1 << wl, n).astype(np.int32))
+
+
+# ---------------------------------------------------------------- exact booth
+@pytest.mark.parametrize("wl", [4, 6, 8, 10, 12, 16])
+def test_booth_exact_equals_product(wl):
+    a, b = rand_ops(wl, 512)
+    got = np.asarray(booth_mul_exact(jnp.asarray(a), jnp.asarray(b), wl))
+    sa = np.asarray(to_signed(jnp.asarray(a), wl))
+    sb = np.asarray(to_signed(jnp.asarray(b), wl))
+    np.testing.assert_array_equal(got, sa * sb)
+
+
+def test_booth_exact_exhaustive_wl8():
+    a = np.arange(256, dtype=np.int32)
+    A, B = np.meshgrid(a, a)
+    got = np.asarray(booth_mul_exact(jnp.asarray(A), jnp.asarray(B), 8))
+    s = np.where(a >= 128, a - 256, a)
+    SA, SB = np.meshgrid(s, s)
+    np.testing.assert_array_equal(got, SA * SB)
+
+
+def test_booth_digits_reconstruct():
+    wl = 12
+    b = jnp.arange(1 << wl, dtype=jnp.int32)
+    d, _ = booth_digits(b, wl)
+    w = jnp.int32(4) ** jnp.arange(wl // 2)
+    recon = jnp.sum(d * w, axis=-1)
+    np.testing.assert_array_equal(np.asarray(recon),
+                                  np.asarray(to_signed(b, wl)))
+
+
+# ------------------------------------------------------- bbm vs dot-level ref
+@pytest.mark.parametrize("wl", [4, 8, 12, 16])
+@pytest.mark.parametrize("kind", [0, 1])
+def test_bbm_matches_dot_level_ref(wl, kind):
+    fn = bbm_type0 if kind == 0 else bbm_type1
+    limit = 2 * wl - 6 if wl >= 14 else 2 * wl
+    for vbl in sorted({0, 1, 3, wl - 1, wl, min(wl + 3, limit), limit}):
+        a, b = rand_ops(wl)
+        got = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), wl, vbl))
+        ref = np.array([bbm_ref(int(x), int(y), wl, vbl, kind)
+                        for x, y in zip(a, b)])
+        np.testing.assert_array_equal(got, ref, err_msg=f"vbl={vbl}")
+
+
+def test_bbm_vbl0_is_exact():
+    for kind, fn in ((0, bbm_type0), (1, bbm_type1)):
+        a, b = rand_ops(12, 1024)
+        got = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), 12, 0))
+        sa = np.asarray(to_signed(jnp.asarray(a), 12))
+        sb = np.asarray(to_signed(jnp.asarray(b), 12))
+        np.testing.assert_array_equal(got, sa * sb)
+
+
+def test_bbm_type0_error_nonpositive():
+    # Type0 truncation floors each row -> error <= 0 always.
+    a, b = rand_ops(12, 4096)
+    for vbl in (3, 7, 11):
+        approx = np.asarray(bbm_type0(jnp.asarray(a), jnp.asarray(b), 12, vbl))
+        sa = np.asarray(to_signed(jnp.asarray(a), 12))
+        sb = np.asarray(to_signed(jnp.asarray(b), 12))
+        assert (approx - sa * sb).max() <= 0
+
+
+def test_bbm_vbl_guard():
+    with pytest.raises(ValueError):
+        bbm_type0(jnp.int32(1), jnp.int32(1), 16, 31)
+
+
+# ------------------------------------------------------------- bam / kulkarni
+@pytest.mark.parametrize("wl", [4, 8, 12])
+def test_bam_matches_ref(wl):
+    for vbl in (0, 2, wl - 1, wl + 2):
+        for hbl in (0, 1):
+            a, b = rand_ops(wl)
+            got = np.asarray(bam_mul(jnp.asarray(a), jnp.asarray(b), wl, vbl, hbl))
+            ref = np.array([bam_ref(int(x), int(y), wl, vbl, hbl)
+                            for x, y in zip(a, b)])
+            np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("wl", [4, 8, 12])
+def test_kulkarni_matches_ref(wl):
+    for k in (0, 3, 5, wl, 2 * wl - 1):
+        a, b = rand_ops(wl)
+        got = np.asarray(kulkarni_mul(jnp.asarray(a), jnp.asarray(b), wl, k))
+        ref = np.array([kulkarni_ref(int(x), int(y), wl, k)
+                        for x, y in zip(a, b)])
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_kulkarni_known_block():
+    # the single inaccurate case of the 2x2 block: 3*3 -> 7
+    assert kulkarni_ref(3, 3, 2, k=4) == 7
+    assert kulkarni_ref(3, 3, 2, k=0) == 9
+    got = np.asarray(kulkarni_mul(jnp.int32(3), jnp.int32(3), 2, 4))
+    assert int(got) == 7
+
+
+# ---------------------------------------------------------- hypothesis props
+@given(a=st.integers(0, (1 << 12) - 1), b=st.integers(0, (1 << 12) - 1),
+       vbl=st.integers(0, 23), kind=st.sampled_from([0, 1]))
+@settings(max_examples=300, deadline=None)
+def test_prop_bbm_matches_ref(a, b, vbl, kind):
+    fn = bbm_type0 if kind == 0 else bbm_type1
+    got = int(np.asarray(fn(jnp.int32(a), jnp.int32(b), 12, vbl)))
+    assert got == bbm_ref(a, b, 12, vbl, kind)
+
+
+@given(a=st.integers(0, (1 << 12) - 1), b=st.integers(0, (1 << 12) - 1),
+       vbl=st.integers(0, 23))
+@settings(max_examples=200, deadline=None)
+def test_prop_bbm_error_bound(a, b, vbl):
+    """|error| is bounded by the sum of maskable row weights."""
+    got = int(np.asarray(bbm_type0(jnp.int32(a), jnp.int32(b), 12, vbl)))
+    exact = ((a - 4096 if a >= 2048 else a) * (b - 4096 if b >= 2048 else b))
+    bound = sum((1 << max(0, vbl - 2 * i)) - 1 << (2 * i) for i in range(6)
+                if vbl - 2 * i > 0)
+    assert exact - bound <= got <= exact
+
+
+@given(a=st.integers(0, (1 << 10) - 1), b=st.integers(0, (1 << 10) - 1),
+       vbl=st.integers(0, 19), hbl=st.integers(0, 9))
+@settings(max_examples=200, deadline=None)
+def test_prop_bam_monotone_truncation(a, b, vbl, hbl):
+    """BAM only ever removes dots: 0 <= approx <= exact product."""
+    got = int(np.asarray(bam_mul(jnp.int32(a), jnp.int32(b), 10, vbl, hbl)))
+    assert 0 <= got <= a * b
+    assert got == bam_ref(a, b, 10, vbl, hbl)
+
+
+# --------------------------------------------------------------- registry api
+def test_registry_signed_wrapping():
+    spec = MulSpec("bam", 8, 3)
+    f = mul(spec)
+    a = jnp.asarray([-5 & 0xFF, 7], dtype=jnp.int32)
+    b = jnp.asarray([9, -3 & 0xFF], dtype=jnp.int32)
+    out = np.asarray(f(a, b))
+    ref0 = -bam_ref(5, 9, 8, 3)
+    ref1 = -bam_ref(7, 3, 8, 3)
+    np.testing.assert_array_equal(out, [ref0, ref1])
+
+
+def test_registry_exactness_flags():
+    assert MulSpec("booth", 16, 0).is_exact
+    assert MulSpec("bbm0", 12, 0).is_exact
+    assert not MulSpec("bbm0", 12, 5).is_exact
+
+
+# ------------------------------------------------------------------ ETM
+def test_etm_exact_for_small_operands():
+    from repro.core.etm import etm_mul
+    wl, split = 10, 5
+    a = RNG.integers(0, 1 << split, 300).astype(np.int32)
+    b = RNG.integers(0, 1 << split, 300).astype(np.int32)
+    got = np.asarray(etm_mul(jnp.asarray(a), jnp.asarray(b), wl, split))
+    np.testing.assert_array_equal(got, a * b)
+
+
+def test_etm_relative_error_bounded():
+    """ETM's fill-with-ones rule bounds the low-part error by 2^(2*split)."""
+    from repro.core.etm import etm_mul
+    wl, split = 12, 6
+    a, b = rand_ops(wl, 2048)
+    got = np.asarray(etm_mul(jnp.asarray(a), jnp.asarray(b), wl, split),
+                     np.int64)
+    exact = a.astype(np.int64) * b.astype(np.int64)
+    err = got - exact
+    assert np.abs(err).max() < (1 << (2 * split))
+
+
+def test_etm_split0_exact():
+    from repro.core.etm import etm_mul
+    a, b = rand_ops(12, 256)
+    got = np.asarray(etm_mul(jnp.asarray(a), jnp.asarray(b), 12, 0))
+    np.testing.assert_array_equal(got, a * b)

@@ -1,0 +1,83 @@
+"""FIR filter + SNR testbed tests (paper §III.C reproduction)."""
+import numpy as np
+import pytest
+
+from repro.core.multipliers import MulSpec
+from repro.dsp import (FIR_DELAY, design_lowpass, fir_apply_fixed,
+                       fir_apply_real, make_signals, quantize, dequantize,
+                       run_filter_case, snr_db)
+
+
+@pytest.fixture(scope="module")
+def sig():
+    return make_signals(n=1 << 13, seed=0)
+
+
+def test_quantize_roundtrip():
+    x = np.linspace(-0.999, 0.999, 1001)
+    import jax.numpy as jnp
+    from repro.core.booth import to_signed
+    q = quantize(jnp.asarray(x), 12)
+    back = np.asarray(dequantize(to_signed(q, 12), 12))
+    assert np.abs(back - x).max() <= 2.0 ** -12 + 1e-9
+
+
+def test_filter_design_is_lowpass():
+    h = design_lowpass()
+    w = np.linspace(0, np.pi, 512)
+    H = np.abs(np.exp(-1j * np.outer(w, np.arange(len(h)))) @ h)
+    passband = H[w <= 0.25 * np.pi]
+    stopband = H[w >= 0.35 * np.pi]
+    assert passband.min() > 0.9
+    assert stopband.max() < 0.25
+
+
+def test_double_precision_snr_matches_paper(sig):
+    out = run_filter_case(None, sig)
+    assert out == pytest.approx(25.7, abs=0.6)          # paper: 25.7 dB
+    snr_in = snr_db(sig.d1, sig.x, 0)
+    assert snr_in == pytest.approx(-3.2, abs=0.6)       # paper: -3.47 dB
+
+
+def test_fixed_point_wl16_close_to_double(sig):
+    out = run_filter_case(MulSpec("booth", 16, 0), sig)
+    ref = run_filter_case(None, sig)
+    assert abs(out - ref) < 0.1                          # paper: 25.4 vs 25.7
+
+
+def test_vbl_degrades_gracefully(sig):
+    """Paper Fig 8(b): steady SNR reduction as VBL grows."""
+    h = design_lowpass()
+    snrs = []
+    for vbl in (0, 13, 15, 17, 19):
+        y = fir_apply_fixed(sig.x, h, MulSpec("bbm0", 16, vbl))
+        snrs.append(snr_db(sig.d1, y, FIR_DELAY))
+    assert all(a >= b - 0.05 for a, b in zip(snrs, snrs[1:]))
+    # paper's operating criterion: a VBL with ~0.4 dB loss exists
+    assert snrs[0] - snrs[2] < 1.0                       # VBL=15 mild
+    assert snrs[0] - snrs[4] > 2.0                       # VBL=19 significant
+
+
+def test_wlbit_datapath_cliff(sig):
+    """Paper Fig 8(a): small WL collapses SNR on the wl-bit datapath."""
+    h = design_lowpass()
+    y8 = fir_apply_fixed(sig.x, h, MulSpec("booth", 8, 0), datapath="wlbit")
+    y16 = fir_apply_fixed(sig.x, h, MulSpec("booth", 16, 0), datapath="wlbit")
+    s8, s16 = snr_db(sig.d1, y8, FIR_DELAY), snr_db(sig.d1, y16, FIR_DELAY)
+    assert s16 - s8 > 3.0
+
+
+def test_exact_path_matches_jax_path(sig):
+    """int64 numpy exact path == jax booth path at wl=16."""
+    h = design_lowpass()
+    a = fir_apply_fixed(sig.x[:512], h, MulSpec("booth", 16, 0))
+    b = fir_apply_fixed(sig.x[:512], h, MulSpec("bbm0", 16, 0))
+    np.testing.assert_allclose(a, b, atol=1e-12)
+
+
+def test_approx_filter_output_bounded(sig):
+    h = design_lowpass()
+    y = fir_apply_fixed(sig.x[:2048], h, MulSpec("bbm0", 16, 13))
+    yr = fir_apply_real(sig.x[:2048], h)
+    # approximate output stays close to the reference in absolute terms
+    assert np.mean((y - yr) ** 2) < 1e-3 * np.var(yr) + 1e-6

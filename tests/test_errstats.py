@@ -1,0 +1,88 @@
+"""Error characterization vs. the paper's Table I (exact reproduction)."""
+import numpy as np
+import pytest
+
+from repro.core import MulSpec, characterize, error_histogram
+from repro.core.hwmodel import (PAPER_AREA_REDUCTION, PAPER_POWER_REDUCTION,
+                                area, power, tmin)
+from repro.core.multipliers import MulSpec as MS
+
+# paper Table I: vbl -> (mean, mse, prob, min)
+TABLE1 = {
+    3: (-3.50, 2.22e1, 0.6875, -1.10e1),
+    6: (-6.15e1, 5.05e3, 0.9375, -1.71e2),
+    9: (-7.89e2, 7.52e5, 0.9893, -2.22e3),
+    12: (-8.53e3, 8.33e7, 0.9983, -2.32e4),
+}
+
+
+@pytest.mark.parametrize("vbl", sorted(TABLE1))
+def test_table1_exhaustive_wl12(vbl):
+    """Exhaustive 2^24-pair characterization must match the paper's digits."""
+    pm, pmse, pprob, pmin = TABLE1[vbl]
+    st = characterize(MulSpec("bbm0", 12, vbl))
+    assert st.n == 1 << 24
+    assert st.mean == pytest.approx(pm, rel=7e-3)
+    assert st.mse == pytest.approx(pmse, rel=7e-3)
+    assert st.prob == pytest.approx(pprob, abs=1e-4)
+    assert st.min == pytest.approx(pmin, rel=5e-3)
+    assert st.max <= 0  # Type0 truncation never overshoots
+
+
+def test_error_monotone_in_vbl():
+    prev = None
+    for vbl in (0, 2, 4, 6, 8):
+        st = characterize(MulSpec("bbm0", 12, vbl), exhaustive=False,
+                          sample=1 << 16, seed=7)
+        if prev is not None:
+            assert st.mse >= prev.mse
+        prev = st
+    assert characterize(MulSpec("bbm0", 12, 0)).mse == 0.0
+
+
+def test_sampled_close_to_exhaustive():
+    ex = characterize(MulSpec("bbm0", 10, 7))
+    sa = characterize(MulSpec("bbm0", 10, 7), exhaustive=False,
+                      sample=1 << 18, seed=3)
+    assert sa.mse == pytest.approx(ex.mse, rel=0.05)
+    assert sa.mean == pytest.approx(ex.mean, rel=0.05)
+
+
+def test_fig2_histogram_mass():
+    centers, pct = error_histogram(MulSpec("bbm0", 10, 9), bins=41)
+    assert pct.sum() == pytest.approx(100.0)
+    # truncation error is <= 0: no mass beyond the zero bin
+    assert pct[centers > 0.005].sum() == pytest.approx(0.0, abs=1e-12)
+    # the adaptive range resolves the distribution over many bins
+    assert (pct > 0.1).sum() >= 10
+
+
+def test_type1_worse_than_type0():
+    """Paper: Type1 trades accuracy for power (higher MSE at equal VBL)."""
+    st0 = characterize(MulSpec("bbm0", 12, 9), exhaustive=False,
+                       sample=1 << 18, seed=5)
+    st1 = characterize(MulSpec("bbm1", 12, 9), exhaustive=False,
+                       sample=1 << 18, seed=5)
+    assert st1.mse > st0.mse
+    assert power(MS("bbm1", 12, 9)) < power(MS("bbm0", 12, 9))
+
+
+# ------------------------------------------------------------- hwmodel checks
+def test_hwmodel_calibration_close_to_paper():
+    for wl in (4, 8, 12, 16):
+        pr = 100 * (1 - power(MS("bbm0", wl, wl - 1)) / power(MS("bbm0", wl, 0)))
+        ar = 100 * (1 - area(MS("bbm0", wl, wl - 1)) / area(MS("bbm0", wl, 0)))
+        assert pr == pytest.approx(PAPER_POWER_REDUCTION[wl], abs=8.0)
+        assert ar == pytest.approx(PAPER_AREA_REDUCTION[wl], abs=6.0)
+
+
+def test_hwmodel_tmin_matches_fig3():
+    assert tmin(MS("booth", 16, 0)) == pytest.approx(1.21, abs=0.01)
+    assert tmin(MS("bbm0", 16, 15)) == pytest.approx(1.13, abs=0.01)
+
+
+def test_hwmodel_monotone():
+    powers = [power(MS("bbm0", 12, v)) for v in range(0, 12, 2)]
+    areas = [area(MS("bbm0", 12, v)) for v in range(0, 12, 2)]
+    assert all(x >= y for x, y in zip(powers, powers[1:]))
+    assert all(x >= y for x, y in zip(areas, areas[1:]))

@@ -1,0 +1,66 @@
+"""Validation of the §II.B white-noise error model against bit-exact runs.
+
+The scalable path (quantize -> exact matmul -> calibrated noise) must match
+the *moments* of the true approximate-multiplier datapath; this is the
+paper's own analysis method turned into a testable claim.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MulSpec, characterize, make_noise_model
+from repro.core.booth import to_signed
+from repro.core.multipliers import mul
+from repro.kernels.ref import bbm_matmul_ref
+
+
+@pytest.mark.parametrize("vbl", [5, 7, 9])
+def test_dot_error_moments_match_bitexact(vbl):
+    """Accumulated error of a K-dot-product ~ Normal(K*mu, K*sigma^2)."""
+    wl, k_len, n_trials = 10, 64, 3000
+    spec = MulSpec("bbm0", wl, vbl)
+    nm = make_noise_model(spec, sample=1 << 18)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << wl, (n_trials, k_len)).astype(np.int32)
+    b = rng.integers(0, 1 << wl, (n_trials, k_len)).astype(np.int32)
+    approx = np.asarray(mul(spec)(jnp.asarray(a), jnp.asarray(b)),
+                        np.int64).sum(axis=1)
+    sa = np.asarray(to_signed(jnp.asarray(a), wl), np.int64)
+    sb = np.asarray(to_signed(jnp.asarray(b), wl), np.int64)
+    exact = (sa * sb).sum(axis=1)
+    err = (approx - exact).astype(np.float64)
+    mu_pred, sd_pred = nm.dot_moments(k_len)
+    assert err.mean() == pytest.approx(mu_pred, rel=0.1)
+    assert err.std() == pytest.approx(sd_pred, rel=0.15)
+
+
+def test_error_variance_scales_linearly_in_k():
+    wl, vbl = 10, 7
+    spec = MulSpec("bbm0", wl, vbl)
+    rng = np.random.default_rng(1)
+    stds = []
+    for k_len in (16, 64):
+        a = rng.integers(0, 1 << wl, (2000, k_len)).astype(np.int32)
+        b = rng.integers(0, 1 << wl, (2000, k_len)).astype(np.int32)
+        approx = np.asarray(mul(spec)(jnp.asarray(a), jnp.asarray(b)),
+                            np.int64).sum(axis=1)
+        sa = np.asarray(to_signed(jnp.asarray(a), wl), np.int64)
+        sb = np.asarray(to_signed(jnp.asarray(b), wl), np.int64)
+        err = (approx - (sa * sb).sum(axis=1)).astype(np.float64)
+        stds.append(err.std())
+    assert stds[1] / stds[0] == pytest.approx(2.0, rel=0.2)  # sqrt(64/16)
+
+
+def test_noise_model_cache():
+    s1 = make_noise_model(MulSpec("bbm0", 12, 9), sample=1 << 16)
+    s2 = make_noise_model(MulSpec("bbm0", 12, 9), sample=1 << 16)
+    assert s1 is s2
+
+
+def test_moments_match_errstats():
+    spec = MulSpec("bbm1", 10, 6)
+    st = characterize(spec)
+    nm = make_noise_model(spec, sample=1 << 18)
+    assert nm.mean == pytest.approx(st.mean, rel=0.05)
+    assert nm.var == pytest.approx(st.var, rel=0.1)
