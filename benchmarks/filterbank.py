@@ -1,0 +1,76 @@
+"""Filterbank benchmark: channels x signal length x (wl, vbl) sweep.
+
+Times the batched multi-channel Broken-Booth FIR datapath end to end
+(quantize -> filterbank -> descale) through ``dsp.fir_apply`` and derives
+throughput in filtered samples/second plus the paper-anchored quality
+number (mean SNR_out across channels at the wl=16 operating point).
+
+On CPU the kernel runs through the Pallas interpreter, which is orders of
+magnitude slower than compiled TPU code — so the host closed-form backend
+is swept densely and the interpreted kernel is sampled once per shape at
+the wl=16 operating point purely as a bit-exactness checkpoint (mismatch shows up as
+``kernel_bitexact: 0`` in the derived dict).  On a TPU backend the sweep
+times the compiled kernel itself.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.multipliers import MulSpec
+from repro.dsp import fir_apply, design_lowpass
+from repro.dsp.testbed import make_filterbank_signals, run_filterbank_case
+from repro.kernels import min_safe_shift, on_tpu
+
+# (channels, signal length) grid; wl -> paper-ish operating vbl
+SHAPES = [(4, 1 << 11), (8, 1 << 12), (16, 1 << 12)]
+POINTS = [(8, 5), (12, 9), (16, 13)]
+
+
+def _time(fn, repeats: int = 3) -> float:
+    fn()                                   # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def filterbank_sweep():
+    rng = np.random.default_rng(0)
+    banks = np.stack([design_lowpass(), design_lowpass(stop_weight=0.5)])
+    # timed sweep: compiled kernel on TPU, closed forms on host; the
+    # bit-exactness checkpoint always goes through the kernel (interpreted
+    # off-TPU)
+    backend = "pallas" if on_tpu() else "host"
+    check_backend = "pallas" if on_tpu() else "pallas-interpret"
+    rows = []
+    best_rate = 0.0
+    kernel_bitexact = True
+    for channels, n in SHAPES:
+        x = rng.standard_normal((channels, n))
+        h = banks[np.arange(channels) % 2]
+        for wl, vbl in POINTS:
+            spec = MulSpec("bbm0", wl, vbl)
+            dt = _time(lambda: fir_apply(x, h, spec, backend=backend))
+            rate = channels * n / dt
+            best_rate = max(best_rate, rate)
+            rows.append({"channels": channels, "n": n, "wl": wl, "vbl": vbl,
+                         "backend": backend, "us_per_call": dt * 1e6,
+                         "samples_per_s": rate})
+        # one kernel cell per shape: bit-exactness checkpoint vs host
+        wl, vbl = POINTS[-1]
+        spec = MulSpec("bbm0", wl, vbl)
+        shift = min_safe_shift(h.shape[1], wl)
+        a = fir_apply(x, h, spec, backend="host", shift=shift)
+        b = fir_apply(x, h, spec, backend=check_backend, shift=shift)
+        kernel_bitexact &= bool(np.array_equal(a, b))
+    snrs = run_filterbank_case(MulSpec("bbm0", 16, 13), channels=4,
+                               n=1 << 12)
+    derived = {
+        "best_samples_per_s": best_rate,
+        "mean_snr_db_wl16_vbl13": float(np.mean(snrs)),
+        "kernel_bitexact": int(kernel_bitexact),
+        "cells": len(rows),
+    }
+    return rows, derived

@@ -35,6 +35,8 @@ def main() -> None:
     _run("fig56_pdp_mse", paper_tables.fig56_pdp_mse)
     _run("fig8_snr", paper_tables.fig8_snr)
     _run("table4_filter", paper_tables.table4_filter)
+    from benchmarks.filterbank import filterbank_sweep
+    _run("filterbank_sweep", filterbank_sweep)
     if "--full" in sys.argv:
         from benchmarks.lm_quality import lm_quality
         _run("lm_quality_beyond_paper", lm_quality)

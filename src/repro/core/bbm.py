@@ -2,7 +2,7 @@
 
 Closed-form, vectorized integer formulas for the dot-diagram truncation of
 Fig. 1.  Both are validated bit-for-bit against the dot-level simulator in
-``ref_sim.py`` (tests/test_bbm.py).
+``ref_sim.py`` (tests/test_core_multipliers.py).
 
 Semantics (columns are bit positions of the 2*wl-bit product; VBL nullifies
 every dot in columns < VBL):

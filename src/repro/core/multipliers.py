@@ -46,7 +46,18 @@ class MulSpec:
 
     @property
     def is_exact(self) -> bool:
-        return self.param == 0 and self.hbl == 0 or self.name == "booth" and self.param == 0
+        """Does this spec reduce to the exact signed product?
+
+        ``booth`` ignores both knobs and is always exact; ``hbl`` only
+        exists for ``bam``; every other design is exact iff its precision
+        knob is 0.  (The old one-liner mixed ``and``/``or`` without parens
+        and misclassified e.g. booth at param != 0.)
+        """
+        if self.name == "booth":
+            return True
+        if self.name == "bam":
+            return self.param == 0 and self.hbl == 0
+        return self.param == 0
 
 
 def _signed_wrap(unsigned_fn: Callable, a, b, wl: int, **kw):

@@ -1,10 +1,14 @@
-"""Fixed-point DSP substrate: FIR filter + SNR testbed (paper §III.C)."""
+"""Fixed-point DSP substrate: FIR filterbank + SNR testbed (paper §III.C)."""
 from .fixed_point import dequantize, quantize, requant_scale
-from .fir import FIR_DELAY, design_lowpass, fir_apply_fixed, fir_apply_real
-from .testbed import TestSignals, make_signals, run_filter_case, snr_db
+from .fir import (BBM_KINDS, FIR_DELAY, design_lowpass, fir_apply,
+                  fir_apply_fixed, fir_apply_real)
+from .testbed import (TestSignals, make_filterbank_signals, make_signals,
+                      run_filter_case, run_filterbank_case, snr_db)
 
 __all__ = [
     "dequantize", "quantize", "requant_scale",
-    "FIR_DELAY", "design_lowpass", "fir_apply_fixed", "fir_apply_real",
-    "TestSignals", "make_signals", "run_filter_case", "snr_db",
+    "BBM_KINDS", "FIR_DELAY", "design_lowpass", "fir_apply",
+    "fir_apply_fixed", "fir_apply_real",
+    "TestSignals", "make_filterbank_signals", "make_signals",
+    "run_filter_case", "run_filterbank_case", "snr_db",
 ]

@@ -1,4 +1,4 @@
-"""Fixed-point FIR filter built on approximate multipliers (paper §III.C).
+"""Fixed-point FIR filtering built on approximate multipliers (paper §III.C).
 
 The paper's application: a 30-tap-order Parks--McClellan low-pass filter
 whose tap multipliers are replaced by Broken-Booth multipliers.  We model
@@ -6,13 +6,32 @@ the datapath bit-exactly:
 
   * input samples and coefficients quantized to Q(1, wl-1),
   * every tap product computed by the selected approximate multiplier
-    (`core.multipliers`), vectorized over (samples x taps),
+    (`core.multipliers`), with an optional per-product arithmetic right
+    shift (the fixed-point MAC rescale),
   * products accumulated at full precision (the 2*wl + log2(taps) bit
     accumulator every sane FIR datapath carries; numerically exact here via
     float64 on the host — int products are < 2^31 so the sum of 31 of them is
     exact in float64's 53-bit mantissa).
 
-`fir_apply_real` is the double-precision reference path.
+``fir_apply`` is the one datapath entry point.  It accepts single signals
+``(N,)`` or multi-channel filterbanks ``(C, N)`` with per-channel tap banks
+``(C, taps)`` and dispatches to one of three backends:
+
+  backend="host"              vectorized jnp/numpy closed forms; supports
+                              every registered multiplier and both
+                              datapaths ("full" / "wlbit")
+  backend="pallas"            the Pallas TPU filterbank kernel
+                              (``kernels.fir_bbm_bank``); Booth-family
+                              specs only, compiled on TPU
+  backend="pallas-interpret"  same kernel through the Pallas interpreter
+                              (bit-exact validation on CPU)
+
+All backends share quantization, the shift semantics (floor of each int
+product), and the descale arithmetic, so for Booth-family specs their real
+outputs are equal bit-for-bit.
+
+`fir_apply_real` is the double-precision reference path; `fir_apply_fixed`
+is the original host-only entry point, kept as a thin wrapper.
 """
 from __future__ import annotations
 
@@ -24,15 +43,20 @@ import numpy as np
 from scipy.signal import remez
 
 from ..core.multipliers import MulSpec, mul
-from .fixed_point import quantize, requant_scale
+from ..kernels.fir_kernel import min_safe_shift
+from .fixed_point import requant_scale
 
-__all__ = ["design_lowpass", "fir_apply_real", "fir_apply_fixed", "FIR_DELAY"]
+__all__ = ["design_lowpass", "fir_apply_real", "fir_apply",
+           "fir_apply_fixed", "FIR_DELAY", "BBM_KINDS"]
 
 # paper testbed: passband edge 0.25*pi, guard (transition) band 0.1*pi
 PASS_EDGE = 0.125      # in cycles/sample (omega / 2pi)
 STOP_EDGE = 0.175
 NUM_TAPS = 31          # order 30 -> integer group delay of 15
 FIR_DELAY = (NUM_TAPS - 1) // 2
+
+# specs the Pallas kernel implements natively: name -> closed-form kind
+BBM_KINDS = {"booth": 0, "bbm0": 0, "bbm1": 1}
 
 
 def design_lowpass(num_taps: int = NUM_TAPS,
@@ -51,29 +75,94 @@ def design_lowpass(num_taps: int = NUM_TAPS,
 
 
 def fir_apply_real(x: np.ndarray, h: np.ndarray) -> np.ndarray:
-    """Double-precision reference filtering (same alignment as fixed path)."""
-    return np.convolve(x, h, mode="full")[: len(x)]
+    """Double-precision reference filtering (same alignment as fixed path).
+
+    Accepts (N,)/(taps,) or batched (C, N)/(C, taps) like ``fir_apply``.
+    """
+    x2, h2, squeeze = _normalize(np.asarray(x, np.float64),
+                                 np.asarray(h, np.float64))
+    y = np.stack([np.convolve(x2[c], h2[c], mode="full")[: x2.shape[1]]
+                  for c in range(x2.shape[0])])
+    return y[0] if squeeze else y
+
+
+def _normalize(x, h):
+    """-> (x (C, N), h (C, taps), squeeze) with h broadcast per channel."""
+    x = np.asarray(x)
+    h = np.asarray(h)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    if h.ndim == 1:
+        h = np.broadcast_to(h, (x.shape[0], h.shape[0]))
+    if h.shape[0] != x.shape[0]:
+        raise ValueError(f"{h.shape[0]} tap banks for {x.shape[0]} channels")
+    return x, h, squeeze
 
 
 def _window(x_int, taps: int):
-    """(n, taps) sliding window of past samples: w[n, k] = x[n-k]."""
-    n = x_int.shape[0]
+    """(..., n, taps) sliding window of past samples: w[.., n, k] = x[.., n-k].
+
+    Positions before the signal start hold zero codes (the delay line's
+    initial state) — the multiplier still runs on them, like the silicon.
+    """
+    n = x_int.shape[-1]
     idx = jnp.arange(n)[:, None] - jnp.arange(taps)[None, :]
-    valid = idx >= 0
-    return jnp.where(valid, x_int[jnp.clip(idx, 0)], 0), valid
+    return jnp.where(idx >= 0, x_int[..., jnp.clip(idx, 0)], 0)
 
 
 @partial(jax.jit, static_argnames=("name", "wl", "param", "hbl"))
 def _tap_products(x_int, h_int, name, wl, param, hbl):
+    # zero *initial state*, not suppressed products: before the signal
+    # starts the delay line holds zero codes and the multiplier still runs
+    # on them (Type1's zero-operand product is nonzero), exactly like the
+    # silicon pipeline and the Pallas kernel's zeroed halo.
     spec = MulSpec(name, wl, param, hbl)
-    w, valid = _window(x_int, h_int.shape[0])
-    prod = mul(spec)(w, h_int[None, :])
-    return jnp.where(valid, prod, 0)
+    w = _window(x_int, h_int.shape[-1])
+    return mul(spec)(w, h_int[..., None, :])
 
 
-def fir_apply_fixed(x: np.ndarray, h: np.ndarray, spec: MulSpec,
-                    datapath: str = "full") -> np.ndarray:
+def _descale(acc, wl: int, shift: int, amp: np.ndarray) -> np.ndarray:
+    """Shared accumulator -> real mapping (identical across backends)."""
+    return acc * float(1 << shift) / requant_scale(wl) / amp
+
+
+def _amp(x2: np.ndarray) -> np.ndarray:
+    """Per-channel input scale so |x| < 1 with headroom; undone at output.
+
+    Per channel (shape (C, 1)), not per batch, so a channel's quantized
+    codes — and therefore its output bits — do not depend on what other
+    signals happen to share the batch (serving determinism).
+    """
+    xmax = np.max(np.abs(x2), axis=-1, keepdims=True)
+    return 1.0 / np.where(xmax > 0, 1.0001 * xmax, 1.0)
+
+
+def _quantize64(x: np.ndarray, wl: int) -> np.ndarray:
+    """Float64 host quantizer: real [-1,1) -> signed integers (int64).
+
+    All backends quantize through this one function so that rounding is
+    identical (float32 jnp rounding can differ by one code from float64).
+    """
+    scale = float(1 << (wl - 1))
+    return np.clip(np.round(np.asarray(x, np.float64) * scale),
+                   -scale, scale - 1).astype(np.int64)
+
+
+def _codes32(q: np.ndarray, wl: int) -> np.ndarray:
+    """Signed integers -> masked wl-bit int32 codes for the jax datapaths."""
+    return (q & ((1 << wl) - 1)).astype(np.int32)
+
+
+def fir_apply(x: np.ndarray, h: np.ndarray, spec: MulSpec, *,
+              backend: str = "host", datapath: str = "full",
+              shift: int | None = None, bc: int = 8,
+              block: int = 512) -> np.ndarray:
     """Bit-exact fixed-point filtering with the given multiplier spec.
+
+    x: signal(s), (N,) or (C, N); h: real taps, (taps,) or (C, taps) for
+    per-channel banks.  Output has the shape of ``x``, aligned with
+    ``fir_apply_real``.
 
     datapath="full"  — products accumulated at full precision (growing
                        accumulator, the Table-I-faithful setting).
@@ -83,46 +172,103 @@ def fir_apply_fixed(x: np.ndarray, h: np.ndarray, spec: MulSpec,
                        paper's Fig. 8(a) cliff at small word lengths; with a
                        full-precision accumulator the word length barely
                        matters down to WL=8 (documented in EXPERIMENTS.md).
+                       Host backend only.
 
-    Returns the real-valued output (descaled), aligned with fir_apply_real.
+    shift — per-product arithmetic right shift before accumulation (the MAC
+    rescale).  ``None`` selects 0 when the int32 envelope allows it and the
+    minimal safe value otherwise (wl = 16 at 31 taps needs shift = 5), so
+    host and Pallas backends agree by default.
     """
+    x2, h2, squeeze = _normalize(x, h)
     wl = spec.wl
-    # scale so |x| < 1 with a little headroom; undo at the output.
-    xmax = float(np.max(np.abs(x)))
-    amp = 1.0 / (1.0001 * xmax) if xmax > 0 else 1.0
+    taps = h2.shape[1]
+    if shift is None:
+        # the rescale exists for the int32 kernel envelope; wlbit models its
+        # own rounding and wl > 16 only runs on the exact int64 host path,
+        # so neither needs (or should pay for) a default shift
+        shift = 0 if (datapath == "wlbit" or wl > 16) \
+            else min_safe_shift(taps, wl)
+    amp = _amp(x2)
+    xq = _quantize64(x2 * amp, wl)
+    hq = _quantize64(h2, wl)
+    if backend in ("pallas", "pallas-interpret"):
+        y = _apply_pallas(xq, hq, spec, datapath=datapath, shift=shift,
+                          amp=amp, bc=bc, block=block,
+                          interpret=backend == "pallas-interpret")
+    elif backend == "host":
+        y = _apply_host(xq, hq, spec, datapath=datapath, shift=shift,
+                        amp=amp)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return y[0] if squeeze else y
+
+
+def _apply_pallas(xq, hq, spec, *, datapath, shift, amp, bc, block,
+                  interpret):
+    from ..kernels.ops import fir_filterbank
+    if spec.name not in BBM_KINDS:
+        raise ValueError(f"backend='pallas' supports Booth-family specs "
+                         f"{sorted(BBM_KINDS)}, not {spec.name!r}")
+    if datapath != "full":
+        raise ValueError("backend='pallas' implements the full-precision "
+                         "accumulator datapath only")
+    wl = spec.wl
+    if wl > 16:
+        raise ValueError("the int32 kernel datapath supports wl <= 16")
+    vbl = 0 if spec.name == "booth" else spec.param
+    out = fir_filterbank(jnp.asarray(_codes32(xq, wl)),
+                         jnp.asarray(_codes32(hq, wl)), wl=wl, vbl=vbl,
+                         kind=BBM_KINDS[spec.name], shift=shift,
+                         interpret=interpret, bc=bc, bt=block)
+    return _descale(np.asarray(out, np.float64), wl, shift, amp)
+
+
+def _apply_host(xq, hq, spec, *, datapath, shift, amp):
+    wl = spec.wl
     if spec.is_exact:
         # exact quantized path in int64 numpy: valid for any wl (the jax
         # closed forms are int32-bound to wl <= 16)
-        scale = float(1 << (wl - 1))
-        xq = np.clip(np.round(x * amp * scale), -scale, scale - 1)
-        hq = np.clip(np.round(h * scale), -scale, scale - 1)
-        prod = _window_np(xq, len(hq))[0] * hq[None, :]
+        win = _window_np(xq, hq.shape[1])
+        prod = win * hq[:, None, :]
+        if shift:
+            prod = prod >> shift            # arithmetic shift == floor
+        prod = prod.astype(np.float64)
     else:
         if wl > 16:
             raise ValueError("approximate fixed-point path supports wl <= 16 "
                              "(int32-exact); the paper's operating point is 16")
-        x_int = quantize(jnp.asarray(x * amp), wl)
-        h_int = quantize(jnp.asarray(h), wl)
         prod = np.asarray(
-            _tap_products(x_int, h_int, spec.name, wl, spec.param, spec.hbl),
-            dtype=np.float64)
+            _tap_products(jnp.asarray(_codes32(xq, wl)),
+                          jnp.asarray(_codes32(hq, wl)),
+                          spec.name, wl, spec.param, spec.hbl),
+            dtype=np.int64)
+        if shift:
+            prod = prod >> shift
+        prod = prod.astype(np.float64)
     if datapath == "full":
-        acc = prod.sum(axis=1)
-        return acc / requant_scale(wl) / amp
+        return _descale(prod.sum(axis=-1), wl, shift, amp)
     if datapath != "wlbit":
         raise ValueError(f"unknown datapath {datapath!r}")
+    if shift:
+        raise ValueError("datapath='wlbit' models its own product rounding; "
+                         "use shift=0")
     # round each 2wl-bit product back to Q(1, wl-1), saturate, then sum in a
     # saturating wl-bit accumulator (left-to-right tap order)
     lim = float(1 << (wl - 1))
     p_wl = np.clip(np.round(prod / lim), -lim, lim - 1)
-    acc = np.zeros(prod.shape[0])
-    for k in range(p_wl.shape[1]):
-        acc = np.clip(acc + p_wl[:, k], -lim, lim - 1)
+    acc = np.zeros(prod.shape[:-1])
+    for k in range(p_wl.shape[-1]):
+        acc = np.clip(acc + p_wl[..., k], -lim, lim - 1)
     return acc / lim / amp
 
 
+def fir_apply_fixed(x: np.ndarray, h: np.ndarray, spec: MulSpec,
+                    datapath: str = "full") -> np.ndarray:
+    """Original host-only entry point (kept for callers and tests)."""
+    return fir_apply(x, h, spec, backend="host", datapath=datapath, shift=0)
+
+
 def _window_np(x: np.ndarray, taps: int):
-    n = len(x)
+    n = x.shape[-1]
     idx = np.arange(n)[:, None] - np.arange(taps)[None, :]
-    valid = idx >= 0
-    return np.where(valid, x[np.clip(idx, 0, None)], 0.0), valid
+    return np.where(idx >= 0, x[..., np.clip(idx, 0, None)], 0)

@@ -1,5 +1,7 @@
 """Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
-from .fir_kernel import fir_bbm
-from .ops import bbm_matmul, flash_attention, on_tpu, quant_matmul
+from .fir_kernel import fir_bbm, fir_bbm_bank, min_safe_shift
+from .ops import bbm_matmul, fir_filterbank, flash_attention, on_tpu, \
+    quant_matmul
 
-__all__ = ["bbm_matmul", "fir_bbm", "flash_attention", "on_tpu", "quant_matmul"]
+__all__ = ["bbm_matmul", "fir_bbm", "fir_bbm_bank", "fir_filterbank",
+           "flash_attention", "min_safe_shift", "on_tpu", "quant_matmul"]

@@ -29,18 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.booth import num_pp_rows
+from .booth_rows import bbm_rows_product, split_signed
 
 __all__ = ["bbm_matmul_kernel", "bbm_matmul"]
-
-
-def _row_params(wl: int, vbl: int):
-    """Static per-row (weight, mask_pow) pairs for the unrolled Booth loop."""
-    out = []
-    for i in range(num_pp_rows(wl)):
-        m = max(0, vbl - 2 * i)
-        out.append((i, m))
-    return out
 
 
 def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
@@ -54,41 +45,14 @@ def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
 
     x = x_ref[...]                      # (bm, bk) int32, wl-bit codes
     w = w_ref[...]                      # (bk, bn) int32, wl-bit codes
-    mask = (1 << wl) - 1
-    sign_bit = 1 << (wl - 1)
-
-    xu = x & mask
-    x_s = jnp.where(xu >= sign_bit, xu - (1 << wl), xu)     # signed A
-    wu = (w & mask)[None, :, :]                              # broadcast (1,bk,bn)
+    _, x_s = split_signed(x, wl)
+    wu = (w & ((1 << wl) - 1))[None, :, :]                   # (1, bk, bn)
     a = x_s[:, :, None]                                      # (bm, bk, 1)
-
-    acc = jnp.zeros(o_ref.shape, jnp.int32)
-    prod = jnp.zeros(x.shape + (w.shape[-1],), jnp.int32)    # (bm, bk, bn)
-    prev_hi = None
-    for i, m in _row_params(wl, vbl):
-        # booth digit of w for row i: d = -2*b_hi + b_mid + b_lo
-        b_hi = (wu >> (2 * i + 1)) & 1
-        b_mid = (wu >> (2 * i)) & 1
-        b_lo = jnp.zeros_like(b_mid) if i == 0 else prev_hi
-        prev_hi = b_hi
-        d = -2 * b_hi + b_mid + b_lo
-        two_m = jnp.int32(1 << m)
-        if kind == 0:
-            rows = d * a
-            contrib = (rows >> m) << m       # floor for two's complement
-        else:
-            mag = jnp.abs(d)
-            pos = mag * a
-            rows = jnp.where(b_hi == 1, -pos - 1, pos)
-            contrib = (rows >> m) << m
-            if m == 0:
-                contrib = contrib + b_hi
-        prod = prod + (contrib << (2 * i))
+    prod = bbm_rows_product(a, wu, wl=wl, vbl=vbl, kind=kind)
     # per-product rescale then reduce over the k axis of the tile
     if shift:
         prod = prod >> shift
-    acc = jnp.sum(prod, axis=1, dtype=jnp.int32)
-    o_ref[...] += acc
+    o_ref[...] += jnp.sum(prod, axis=1, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
@@ -112,7 +76,7 @@ def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

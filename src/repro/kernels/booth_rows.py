@@ -1,0 +1,63 @@
+"""Shared Broken-Booth row accumulation for the Pallas kernels.
+
+One unrolled, shift-only implementation of the paper's partial-product
+truncation, used by both ``bbm_matmul`` and the FIR filterbank kernel so the
+Booth row loop is written exactly once on the kernel side.  It mirrors the
+closed forms in ``core.bbm`` (``bbm_type0`` / ``bbm_type1``) but avoids
+integer division (``floor_divide``) in favour of arithmetic shifts, which is
+what the TPU VPU actually supports; ``(x >> m) << m`` is the same
+floor-toward ``-inf`` truncation for two's-complement values.
+
+Everything is resolved at trace time: the row loop is unrolled over the
+``wl/2`` radix-4 rows and the per-row mask widths are Python ints, so the
+helper is safe to call from inside a Pallas kernel body as well as from
+plain jitted code.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.booth import num_pp_rows
+
+__all__ = ["bbm_rows_product", "split_signed"]
+
+
+def split_signed(x, wl: int):
+    """(unsigned wl-bit view, signed reinterpretation) of int32 codes."""
+    mask = (1 << wl) - 1
+    sign = 1 << (wl - 1)
+    xu = x & mask
+    return xu, jnp.where(xu >= sign, xu - (1 << wl), xu)
+
+
+def bbm_rows_product(a_s, bu, *, wl: int, vbl: int, kind: int):
+    """Broken-Booth product of signed ``a_s`` and unsigned wl-bit ``bu``.
+
+    ``a_s`` and ``bu`` are int32 arrays with broadcast-compatible shapes;
+    the result has the broadcast shape.  Bit-identical to
+    ``core.bbm.bbm_mul(a, b, wl, vbl, kind)`` for in-range operands.
+    ``vbl = 0`` reduces both kinds to the exact Booth product.
+    """
+    prod = None
+    prev_hi = None
+    for r in range(num_pp_rows(wl)):
+        # booth digit of b for row r: d = -2*b_hi + b_mid + b_lo
+        b_hi = (bu >> (2 * r + 1)) & 1
+        b_mid = (bu >> (2 * r)) & 1
+        b_lo = jnp.zeros_like(b_mid) if r == 0 else prev_hi
+        prev_hi = b_hi
+        d = -2 * b_hi + b_mid + b_lo
+        m = max(0, vbl - 2 * r)           # bits nullified in this row
+        if kind == 0:
+            rows = d * a_s
+            contrib = (rows >> m) << m    # floor for two's complement
+        else:
+            mag = jnp.abs(d)
+            pos = mag * a_s
+            rows = jnp.where(b_hi == 1, -pos - 1, pos)
+            contrib = (rows >> m) << m
+            if m == 0:                    # S dot survives only at m == 0
+                contrib = contrib + b_hi
+        term = contrib << (2 * r)
+        prod = term if prod is None else prod + term
+    return prod

@@ -1,13 +1,39 @@
-"""Pallas TPU kernel: direct-form FIR filter with Broken-Booth tap products.
+"""Pallas TPU kernel: multi-channel direct-form FIR filterbank with
+Broken-Booth tap products.
 
-The paper's own workload as a TPU kernel: ``y[n] = sum_k bbm(x[n-k], h[k])``
-with the closed-form Broken-Booth product per tap.  The signal is blocked
-along time; each block loads its samples plus ``taps-1`` history samples
-(halo) into VMEM, and the tap loop is unrolled at trace time (30 taps).
+The paper's own workload as a TPU kernel, scaled out: ``C`` independent
+channels, each with its own wl-bit tap bank, computed as
 
-Accumulation is int32; the caller provides wl-bit codes, so the documented
-envelope is taps * 2^(2*wl-1) < 2^31 (fine for the paper's 31 taps at
-wl <= 12; at wl=16 use the per-product ``shift`` rescale like bbm_matmul).
+    y[c, n] = sum_k shift(bbm(x[c, n-k], h[c, k]))
+
+with the closed-form Broken-Booth product per tap (Type0/Type1) and an
+optional per-product arithmetic right shift (the fixed-point MAC rescale
+that keeps the int32 accumulator inside its envelope at wl = 16).
+
+Streaming layout (this is the scaling story vs. the old single-channel
+kernel, which parked the whole padded signal in VMEM):
+
+  * 2-D grid over (channel blocks, time blocks); BlockSpec tiles of shape
+    ``(bc, bt)`` stream through VMEM, so signal length is bounded by HBM,
+    not VMEM.
+  * The ``taps - 1`` history samples each time block needs from its left
+    neighbour are carried through a VMEM scratch buffer: the time axis is
+    sequential ("arbitrary" dimension semantics), each step deposits its
+    last ``taps - 1`` raw codes into the scratch and the next step reads
+    them back — an explicit halo exchange instead of overlapped loads,
+    which BlockSpec index maps cannot express.  At ``t == 0`` the halo is
+    zeroed (zero initial filter state, matching the host reference).
+  * The channel grid axis is "parallel": a megacore split along channels
+    keeps its own scratch, and every channel block re-zeroes the halo at
+    its first time step, so the carry never crosses channel blocks.
+
+The Booth row loop itself lives in ``booth_rows.bbm_rows_product`` and is
+shared with ``bbm_matmul`` — the kernels no longer hand-inline their own
+copies of the paper's arithmetic.
+
+Overflow envelope: taps * 2^(2*wl - 1 - shift) < 2^31 (checked on entry;
+at the paper's operating point of 31 taps x wl = 16 this requires
+``shift >= 5`` — see ``min_safe_shift``).
 """
 from __future__ import annotations
 
@@ -16,82 +42,105 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from ..core.booth import num_pp_rows
+from .booth_rows import bbm_rows_product, split_signed
 
-__all__ = ["fir_bbm"]
+__all__ = ["fir_bbm", "fir_bbm_bank", "min_safe_shift"]
 
 
-def _fir_kernel(x_ref, h_ref, o_ref, *, wl: int, vbl: int, kind: int,
-                taps: int, shift: int, block: int):
-    i = pl.program_id(0)
-    # the whole (padded) signal sits in VMEM (FIR signals are small); each
-    # block slices its window + taps-1 halo — overlapping halo reads are not
-    # expressible through BlockSpec index maps
-    xs = jax.lax.dynamic_slice(x_ref[...], (i * block,),
-                               (block + taps - 1,))
-    h = h_ref[...]                         # (taps,) int32 codes
+def min_safe_shift(taps: int, wl: int) -> int:
+    """Smallest per-product shift keeping the int32 accumulator safe."""
+    shift = 0
+    while taps * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
+        shift += 1
+    return shift
+
+
+def _check_envelope(taps: int, wl: int, shift: int) -> None:
+    if taps * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
+        raise ValueError(
+            f"accumulator may overflow int32: taps={taps}, wl={wl}, "
+            f"shift={shift}; raise `shift` to >= {min_safe_shift(taps, wl)}")
+
+
+def _fir_bank_kernel(x_ref, h_ref, o_ref, halo_ref, *, wl: int, vbl: int,
+                     kind: int, taps: int, shift: int, bt: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _zero_state():
+        # zero initial filter state at the start of every channel block's
+        # time sweep (also isolates channel blocks from one another)
+        halo_ref[...] = jnp.zeros_like(halo_ref)
+
+    # halo exchange: taps-1 raw codes deposited by the previous time block
+    xs = jnp.concatenate([halo_ref[...], x_ref[...]], axis=1)
+    h = h_ref[...]                          # (bc, taps) int32 codes
     mask = (1 << wl) - 1
-    sign = 1 << (wl - 1)
 
-    acc = jnp.zeros((block,), jnp.int32)
-    for t in range(taps):
-        # window of samples feeding tap t for each output in the block
-        a = jax.lax.dynamic_slice(xs, (taps - 1 - t,), (block,))
-        au = a & mask
-        a_s = jnp.where(au >= sign, au - (1 << wl), au)
-        bu = h[t] & mask
-        prod = jnp.zeros((block,), jnp.int32)
-        prev_hi = jnp.int32(0)
-        for r in range(num_pp_rows(wl)):
-            b_hi = (bu >> (2 * r + 1)) & 1
-            b_mid = (bu >> (2 * r)) & 1
-            b_lo = jnp.int32(0) if r == 0 else prev_hi
-            prev_hi = b_hi
-            d = -2 * b_hi + b_mid + b_lo
-            m = max(0, vbl - 2 * r)
-            if kind == 0:
-                rows = d * a_s
-                contrib = (rows >> m) << m
-            else:
-                mag = jnp.abs(d)
-                pos = mag * a_s
-                rows = jnp.where(b_hi == 1, -pos - 1, pos)
-                contrib = (rows >> m) << m
-                if m == 0:
-                    contrib = contrib + b_hi
-            prod = prod + (contrib << (2 * r))
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for k in range(taps):
+        # window of samples feeding tap k for each output in the block
+        _, a_s = split_signed(xs[:, taps - 1 - k:taps - 1 - k + bt], wl)
+        bu = (h[:, k] & mask)[:, None]      # per-channel coefficient
+        prod = bbm_rows_product(a_s, bu, wl=wl, vbl=vbl, kind=kind)
         if shift:
             prod = prod >> shift
         acc = acc + prod
     o_ref[...] = acc
+    halo_ref[...] = xs[:, bt:]              # carry history to the next block
 
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
-                                             "block", "interpret"))
-def fir_bbm(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
-            block: int = 512, interpret: bool = False):
-    """Bit-exact Broken-Booth FIR.  x: (N,) codes, h: (taps,) codes."""
-    n = x.shape[0]
-    taps = h.shape[0]
-    if taps * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
-        raise ValueError("accumulator may overflow int32: raise `shift`")
-    block = min(block, n)
-    nb = pl.cdiv(n, block)
-    pad = nb * block - n
-    xp = jnp.pad(x, (taps - 1, pad))        # history halo + tail pad
-    kernel = functools.partial(_fir_kernel, wl=wl, vbl=vbl, kind=kind,
-                               taps=taps, shift=shift, block=block)
-    n_pad = xp.shape[0]
+                                             "bc", "bt", "interpret"))
+def fir_bbm_bank(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+                 bc: int = 8, bt: int = 512, interpret: bool = False):
+    """Bit-exact Broken-Booth FIR filterbank.
+
+    x: (C, N) int32 wl-bit signal codes, one row per channel.
+    h: (C, taps) int32 wl-bit tap codes (per-channel banks) or (taps,)
+       to share one bank across all channels.
+    Returns (C, N) int32 accumulator values (sum of shifted products).
+    """
+    channels, n = x.shape
+    if h.ndim == 1:
+        h = jnp.broadcast_to(h[None, :], (channels, h.shape[0]))
+    taps = h.shape[1]
+    _check_envelope(taps, wl, shift)
+
+    bc = min(bc, channels)
+    bt = min(bt, n)
+    nc = pl.cdiv(channels, bc)
+    nt = pl.cdiv(n, bt)
+    # tail padding only; the taps-1 history halo travels through scratch
+    xp = jnp.pad(x, ((0, nc * bc - channels), (0, nt * bt - n)))
+    hp = jnp.pad(h, ((0, nc * bc - channels), (0, 0)))
+
+    kernel = functools.partial(_fir_bank_kernel, wl=wl, vbl=vbl, kind=kind,
+                               taps=taps, shift=shift, bt=bt)
     out = pl.pallas_call(
         kernel,
-        grid=(nb,),
+        grid=(nc, nt),
         in_specs=[
-            pl.BlockSpec((n_pad,), lambda i: (0,)),
-            pl.BlockSpec((taps,), lambda i: (0,)),
+            pl.BlockSpec((bc, bt), lambda c, t: (c, t)),
+            pl.BlockSpec((bc, taps), lambda c, t: (c, 0)),
         ],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.int32),
+        out_specs=pl.BlockSpec((bc, bt), lambda c, t: (c, t)),
+        out_shape=jax.ShapeDtypeStruct((nc * bc, nt * bt), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bc, taps - 1), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(xp, h)
-    return out[:n]
+    )(xp, hp)
+    return out[:channels, :n]
+
+
+def fir_bbm(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+            block: int = 512, interpret: bool = False):
+    """Single-channel Broken-Booth FIR: x (N,) codes, h (taps,) codes.
+
+    Thin wrapper over the (channels, time) filterbank kernel with C = 1.
+    """
+    return fir_bbm_bank(x[None, :], h[None, :], wl=wl, vbl=vbl, kind=kind,
+                        shift=shift, bc=1, bt=block, interpret=interpret)[0]

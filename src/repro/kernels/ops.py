@@ -10,10 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from .bbm_matmul import bbm_matmul as _bbm_matmul
+from .fir_kernel import fir_bbm_bank as _fir_bbm_bank
 from .flash_attention import flash_attention as _flash_attention
 from .quant_matmul import quant_matmul as _quant_matmul
 
-__all__ = ["on_tpu", "bbm_matmul", "quant_matmul", "flash_attention"]
+__all__ = ["on_tpu", "bbm_matmul", "fir_filterbank", "quant_matmul",
+           "flash_attention"]
 
 
 def on_tpu() -> bool:
@@ -33,6 +35,20 @@ def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
         interpret = not on_tpu()
     return _bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
                        interpret=interpret, **block_kw)
+
+
+def fir_filterbank(x, h, *, wl: int, vbl: int, kind: int = 0,
+                   shift: int = 0, interpret=None, **block_kw):
+    """Batched multi-channel Broken-Booth FIR (int32 codes in/out).
+
+    x: (C, N) signal codes, h: (C, taps) per-channel tap banks (or (taps,)
+    shared).  The int32 envelope taps * 2^(2*wl-1-shift) < 2^31 is checked
+    inside the kernel wrapper.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift,
+                         interpret=interpret, **block_kw)
 
 
 def quant_matmul(x, w, s_x, s_w, mu=0.0, sigma=0.0, *, wl: int = 16,

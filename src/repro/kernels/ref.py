@@ -6,7 +6,8 @@ import jax.numpy as jnp
 
 from ..core.bbm import bbm_type0, bbm_type1
 
-__all__ = ["bbm_matmul_ref", "quant_matmul_ref", "attention_ref"]
+__all__ = ["bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
+           "attention_ref"]
 
 
 def bbm_matmul_ref(x, w, *, wl: int, vbl: int, kind: int = 0,
@@ -17,6 +18,26 @@ def bbm_matmul_ref(x, w, *, wl: int, vbl: int, kind: int = 0,
     if shift:
         prod = prod >> shift
     return jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def fir_bank_ref(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0):
+    """y[c,n] = sum_k (bbm(x[c,n-k], h[c,k]) >> shift), zero initial state.
+
+    x: (C, N) codes, h: (C, taps) codes; the pure-jnp oracle for the
+    filterbank kernel, built on the closed forms in ``core.bbm``.
+    """
+    h = w
+    fn = bbm_type0 if kind == 0 else bbm_type1
+    channels, n = x.shape
+    taps = h.shape[1]
+    xp = jnp.pad(x, ((0, 0), (taps - 1, 0)))
+    # w[c, n, k] = x[c, n - k] (zeros before the signal starts)
+    idx = jnp.arange(n)[:, None] + (taps - 1) - jnp.arange(taps)[None, :]
+    win = xp[:, idx]                                      # (C, N, taps)
+    prod = fn(win, h[:, None, :], wl, vbl)
+    if shift:
+        prod = prod >> shift
+    return jnp.sum(prod, axis=-1, dtype=jnp.int32)
 
 
 def quant_matmul_ref(x, w, s_x, s_w, mu, sigma, *, wl: int = 16, key=None):

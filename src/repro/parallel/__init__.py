@@ -1,1 +1,5 @@
-"""Subsystem package."""
+"""Distribution layer: logical sharding rules, compressed collectives, and
+the channel-sharded FIR filterbank."""
+from .filterbank import sharded_filterbank
+
+__all__ = ["sharded_filterbank"]

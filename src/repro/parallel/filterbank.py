@@ -1,0 +1,70 @@
+"""Channel-sharded Broken-Booth FIR filterbank (shard_map over the mesh).
+
+Channels are embarrassingly parallel in the filterbank: y[c] depends only
+on x[c] and h[c].  ``sharded_filterbank`` splits the channel axis across a
+mesh axis with ``shard_map`` and runs the single-device datapath on each
+shard — the Pallas kernel on TPU, the pure-jnp closed form elsewhere — so a
+(C, N) batch is served by ``mesh.shape[axis]`` devices with no collectives
+at all (the sharding *is* the decomposition).
+
+Everything is integer-code level: (C, N) int32 wl-bit signal codes in,
+(C, N) int32 accumulator values out, bit-identical to the unsharded kernel
+because each channel's computation is untouched by the split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..kernels.fir_kernel import _check_envelope, fir_bbm_bank
+from ..kernels.ops import on_tpu
+from ..kernels.ref import fir_bank_ref
+
+__all__ = ["sharded_filterbank"]
+
+
+def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
+                       shift: int = 0, axis: str = "data",
+                       use_kernel: bool | None = None, bc: int = 8,
+                       bt: int = 512):
+    """Filterbank over ``mesh`` with channels sharded on mesh axis ``axis``.
+
+    x: (C, N) int32 codes, h: (C, taps) int32 codes (or (taps,) shared).
+    C must divide by the mesh axis size; pad channels first if it does not.
+    ``use_kernel=None`` picks the Pallas kernel on TPU and the jnp closed
+    form on host backends (where the interpreter inside shard_map would
+    only slow things down).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if h.ndim == 1:
+        h = jnp.broadcast_to(h[None, :], (x.shape[0], h.shape[0]))
+    # the kernel path checks this itself; the closed-form host path would
+    # silently wrap int32 instead — guard both uniformly
+    _check_envelope(h.shape[1], wl, shift)
+    n_shards = mesh.shape[axis]
+    if x.shape[0] % n_shards:
+        raise ValueError(f"channels={x.shape[0]} not divisible by "
+                         f"mesh axis {axis!r} of size {n_shards}")
+    if use_kernel is None:
+        use_kernel = on_tpu()
+
+    if use_kernel:
+        apply_fn = functools.partial(fir_bbm_bank, wl=wl, vbl=vbl, kind=kind,
+                                     shift=shift, bc=bc, bt=bt,
+                                     interpret=not on_tpu())
+    else:
+        apply_fn = functools.partial(fir_bank_ref, wl=wl, vbl=vbl, kind=kind,
+                                     shift=shift)
+
+    fn = shard_map(
+        lambda xs, hs: apply_fn(xs, hs),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+    return fn(x, h)

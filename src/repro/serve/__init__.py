@@ -1,1 +1,4 @@
-"""Subsystem package."""
+"""Serving layer: LM prefill/decode engine + batched FIR filterbank path."""
+from .engine import FilterbankEngine, FilterRequest, Scheduler
+
+__all__ = ["FilterbankEngine", "FilterRequest", "Scheduler"]

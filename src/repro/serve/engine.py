@@ -11,6 +11,11 @@ donates the cache buffers so each step updates in place.
 
 ``Scheduler`` is a minimal continuous-batching loop for the serving example:
 fixed slot count, requests enter free slots, finished slots are recycled.
+
+``FilterbankEngine`` is the batched request path for the paper's own
+workload: FIR filtering requests accumulate into channel slots and are
+served by a single multi-channel Broken-Booth filterbank dispatch
+(``dsp.fir_apply``), one kernel call per flush instead of one per signal.
 """
 from __future__ import annotations
 
@@ -27,7 +32,8 @@ from ..models import ModelRuntime, init_cache, lm_apply
 from ..parallel.logical import (RULES, RULES_MULTIPOD, batch_pspec,
                                 is_multipod, spec_to_pspec, tree_shardings)
 
-__all__ = ["cache_logical_axes", "make_serve_fns", "Scheduler"]
+__all__ = ["cache_logical_axes", "make_serve_fns", "Scheduler",
+           "FilterRequest", "FilterbankEngine"]
 
 
 def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
@@ -101,6 +107,66 @@ def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
                        out_shardings=(b_sh, c_sh),
                        donate_argnums=(2,))
     return prefill_j, decode_j
+
+
+@dataclasses.dataclass
+class FilterRequest:
+    rid: int
+    signal: np.ndarray            # 1-D real samples
+    bank: int = 0                 # which tap bank filters this request
+
+
+class FilterbankEngine:
+    """Batched FIR serving: N pending requests -> one filterbank dispatch.
+
+    Tap banks are designed/passed once at construction; each request names
+    the bank that should filter it.  ``flush`` pads the pending signals to
+    a common length, stacks them into a (C, N) batch with the per-request
+    tap banks gathered into a (C, taps) array, runs the whole batch through
+    ``dsp.fir_apply`` (host or Pallas backend) in a single call, and
+    returns each request's output trimmed back to its own length.
+    """
+
+    def __init__(self, h_banks: np.ndarray, spec, *, backend: str = "host",
+                 max_channels: int = 64, block: int = 512):
+        from ..dsp.fir import fir_apply
+        h_banks = np.atleast_2d(np.asarray(h_banks, np.float64))
+        self.h_banks = h_banks
+        self.spec = spec
+        self.backend = backend
+        self.max_channels = max_channels
+        self.block = block
+        self._apply = fir_apply
+        self._pending: List[FilterRequest] = []
+        self._next_rid = 0
+
+    def submit(self, signal: np.ndarray, bank: int = 0) -> int:
+        """Queue one signal; returns its request id."""
+        if not 0 <= bank < len(self.h_banks):
+            raise ValueError(f"unknown tap bank {bank}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(FilterRequest(rid, np.asarray(signal), bank))
+        return rid
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Serve every pending request; returns {rid: filtered signal}."""
+        results: Dict[int, np.ndarray] = {}
+        while self._pending:
+            batch = self._pending[: self.max_channels]
+            n = max(len(r.signal) for r in batch)
+            x = np.zeros((len(batch), n))
+            for c, r in enumerate(batch):
+                x[c, : len(r.signal)] = r.signal
+            h = self.h_banks[[r.bank for r in batch]]
+            # dispatch before dequeue: a raising backend leaves the batch
+            # queued so a later flush can still serve it
+            y = self._apply(x, h, self.spec, backend=self.backend,
+                            block=self.block)
+            self._pending = self._pending[self.max_channels:]
+            for c, r in enumerate(batch):
+                results[r.rid] = y[c, : len(r.signal)]
+        return results
 
 
 @dataclasses.dataclass

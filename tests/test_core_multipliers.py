@@ -163,6 +163,31 @@ def test_registry_exactness_flags():
     assert not MulSpec("bbm0", 12, 5).is_exact
 
 
+# regression for the and/or-precedence bug in MulSpec.is_exact: the flag is
+# checked *empirically* against an exhaustive wl=4 sweep for every
+# registered multiplier and a spread of knob settings
+@pytest.mark.parametrize("name,param,hbl", [
+    ("booth", 0, 0), ("booth", 4, 0),      # param is ignored: always exact
+    ("bbm0", 0, 0), ("bbm0", 3, 0),
+    ("bbm1", 0, 0), ("bbm1", 3, 0),
+    ("bam", 0, 0), ("bam", 3, 0), ("bam", 0, 2),   # hbl alone inexact
+    ("kulkarni", 0, 0), ("kulkarni", 4, 0),
+    ("etm", 0, 0), ("etm", 2, 0),
+])
+def test_is_exact_matches_behavior(name, param, hbl):
+    wl = 4
+    spec = MulSpec(name, wl, param, hbl)
+    a = np.arange(1 << wl, dtype=np.int32)
+    A, B = [jnp.asarray(v) for v in np.meshgrid(a, a)]
+    got = np.asarray(mul(spec)(A, B))
+    s = np.where(a >= 1 << (wl - 1), a - (1 << wl), a)
+    SA, SB = np.meshgrid(s, s)
+    empirically_exact = bool(np.array_equal(got, SA * SB))
+    assert spec.is_exact == empirically_exact, (
+        f"{spec} reports is_exact={spec.is_exact} but the exhaustive wl=4 "
+        f"sweep says {empirically_exact}")
+
+
 # ------------------------------------------------------------------ ETM
 def test_etm_exact_for_small_operands():
     from repro.core.etm import etm_mul

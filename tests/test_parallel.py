@@ -79,6 +79,21 @@ got = np.asarray(means["g"])
 err = float(np.abs(got - np.broadcast_to(ref, got.shape)).max())
 assert err < 0.05, err
 
+# --- channel-sharded filterbank: 8 channels over 8 data shards
+from repro.parallel.filterbank import sharded_filterbank
+from repro.kernels.ref import fir_bank_ref
+mesh1 = jax.make_mesh((8,), ("data",))
+xc = jnp.asarray(rng.integers(0, 1 << 12, (8, 256)), jnp.int32)
+hc = jnp.asarray(rng.integers(0, 1 << 12, (8, 31)), jnp.int32)
+got_fb = sharded_filterbank(xc, hc, mesh1, wl=12, vbl=9, kind=1)
+ref_fb = fir_bank_ref(xc, hc, wl=12, vbl=9, kind=1)
+assert np.array_equal(np.asarray(got_fb), np.asarray(ref_fb))
+try:
+    sharded_filterbank(xc[:6], hc[:6], mesh1, wl=12, vbl=9)
+    raise SystemExit("divisibility guard did not fire")
+except ValueError:
+    pass
+
 # --- tiny train step on a real 4x2 mesh
 from repro.configs import get_arch, reduced
 from repro.models import ModelRuntime
@@ -100,7 +115,8 @@ for i in range(3):
 l1 = float(metrics["loss"])
 assert np.isfinite(l1)
 assert l1 < l0          # overfits the fixed batch
-print(json.dumps({"ok": True, "l0": l0, "l1": l1, "int8_err": err}))
+print(json.dumps({"ok": True, "l0": l0, "l1": l1, "int8_err": err,
+                  "filterbank_ok": True}))
 """
 
 
