@@ -118,7 +118,15 @@ def trip_count(cond_lines: List[str]) -> Optional[int]:
 
 
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
-_DOT_ARGS = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\)")
+# dot operands print either bare (`dot(%a, %b)`) or typed
+# (`dot(f32[64,64]{1,0} %a, ...)`) depending on the XLA build; accept both
+# and capture the inline operand shape when present so contracted dims can
+# be read straight off the line without a symbol-table hit.
+_OPERAND = (r"(?:[a-z0-9]+\[(?P<{s}>[0-9,]*)\](?:\{{[^}}]*\}})?\s+)?"
+            r"%?(?P<{n}>[\w.\-]+)")
+_DOT_ARGS = re.compile(r"dot\(\s*" + _OPERAND.format(s="lshape", n="lhs")
+                       + r"\s*,\s*" + _OPERAND.format(s="rshape", n="rhs")
+                       + r"\s*\)")
 _RHS_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]+)\}")
 _TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 
@@ -135,7 +143,12 @@ def _build_symtab(lines: List[str]) -> Dict[str, List[int]]:
 
 
 def _dot_flops(line: str, sym: Dict[str, List[int]]) -> float:
-    """2 * prod(result dims) * prod(contracted dims)."""
+    """2 * prod(result dims) * prod(contracted dims).
+
+    The 2x multiply-add convention matches ``model_flops``'s 6ND-style
+    accounting; operand dims come from the inline typed operand when the
+    build prints one, falling back to the computation's symbol table.
+    """
     first = _SHAPE_RE.search(line)       # result shape is leftmost
     if not first:
         return 0.0
@@ -145,15 +158,21 @@ def _dot_flops(line: str, sym: Dict[str, List[int]]) -> float:
     lhs_c = _CONTRACT_RE.search(line)
     rhs_c = _RHS_CONTRACT_RE.search(line)
     if args:
-        lhs, rhs = args.groups()
-        if lhs_c and lhs in sym:
-            for idx in (int(i) for i in lhs_c.group(1).split(",") if i):
-                if idx < len(sym[lhs]):
-                    contracted *= sym[lhs][idx]
-        elif rhs_c and rhs in sym:
-            for idx in (int(i) for i in rhs_c.group(1).split(",") if i):
-                if idx < len(sym[rhs]):
-                    contracted *= sym[rhs][idx]
+        def dims_of(shape_group, name_group):
+            inline = args.group(shape_group)
+            if inline is not None:
+                return [int(x) for x in inline.split(",") if x]
+            return sym.get(args.group(name_group))
+
+        for contract_re, shape_g, name_g in (
+                (lhs_c, "lshape", "lhs"), (rhs_c, "rshape", "rhs")):
+            dims = dims_of(shape_g, name_g)
+            if contract_re and dims is not None:
+                for idx in (int(i) for i in contract_re.group(1).split(",")
+                            if i):
+                    if idx < len(dims):
+                        contracted *= dims[idx]
+                break
     return 2.0 * float(np.prod(res_dims or [1])) * contracted
 
 

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core.multipliers import MulSpec
 from repro.core.hwmodel import fir_power, quap, fir_area
-from repro.dsp import FIR_DELAY, design_lowpass, fir_apply, \
+from repro.dsp import FIR_DELAY, PrecodedBank, design_lowpass, fir_apply, \
     fir_apply_fixed, make_signals, run_filter_case, run_filterbank_case, \
     snr_db
 
@@ -47,6 +47,13 @@ def main():
     y_host = fir_apply(x, hb, spec, backend="host")
     y_kern = fir_apply(x, hb, spec, backend="pallas-interpret")
     print(f"  identical: {np.array_equal(y_host, y_kern)}")
+
+    print()
+    print("Precoded bank (decode phase hoisted out of the hot path):")
+    bank = PrecodedBank(banks, spec)         # quantize + Booth-decode, once
+    y_pre = fir_apply(x, bank.take([0, 1, 0, 1]),
+                      backend="pallas-interpret")
+    print(f"  identical to raw taps: {np.array_equal(y_kern, y_pre)}")
 
 
 if __name__ == "__main__":

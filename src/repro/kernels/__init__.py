@@ -1,7 +1,12 @@
 """Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
-from .fir_kernel import fir_bbm, fir_bbm_bank, min_safe_shift
-from .ops import bbm_matmul, fir_filterbank, flash_attention, on_tpu, \
-    quant_matmul
+from .booth_rows import booth_precode
+from .fir_kernel import (fir_bbm, fir_bbm_bank, fir_bbm_bank_precoded,
+                         min_safe_shift)
+from .ops import (bbm_matmul, bbm_matmul_precoded, fir_filterbank,
+                  fir_filterbank_precoded, flash_attention, on_tpu,
+                  quant_matmul)
 
-__all__ = ["bbm_matmul", "fir_bbm", "fir_bbm_bank", "fir_filterbank",
-           "flash_attention", "min_safe_shift", "on_tpu", "quant_matmul"]
+__all__ = ["bbm_matmul", "bbm_matmul_precoded", "booth_precode", "fir_bbm",
+           "fir_bbm_bank", "fir_bbm_bank_precoded", "fir_filterbank",
+           "fir_filterbank_precoded", "flash_attention", "min_safe_shift",
+           "on_tpu", "quant_matmul"]

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: bit-exact Broken-Booth approximate matmul.
+"""Pallas TPU kernel: bit-exact Broken-Booth approximate matmul,
+precoded-digit datapath.
 
 Computes ``out[m, n] = sum_k shift(bbm(x[m, k], w[k, n]))`` where ``bbm`` is
 the closed-form Broken-Booth product (Type0/Type1) and ``shift`` an optional
@@ -10,6 +11,14 @@ TPU adaptation notes (this is the paper's multiplier *as a TPU kernel*):
     is bit-exact emulation of the proposed silicon at memory-bandwidth speed,
     for datapath validation and for calibrating the statistical noise model
     that the MXU fast path (quant_matmul) uses.
+  * ``w`` is the Booth *multiplier* operand and is constant across the whole
+    grid (every (i, j) tile re-reads the same weight blocks), so its radix-4
+    digits are decoded exactly once per call by ``booth_rows.booth_precode``
+    and streamed in as ``(wl//2, K, N)`` planes, BlockSpec-tiled like ``w``
+    itself.  The in-kernel row loop is then multiply-free (select/negate/
+    shift per row).  ``bbm_matmul`` keeps the raw-code signature and
+    precodes internally; ``bbm_matmul_precoded`` accepts decoded planes for
+    callers whose weights are long-lived.
   * The Booth row loop (wl/2 iterations) is unrolled at trace time; each row
     materializes one (bm, bk, bn) int32 tile in VMEM.  With the default
     64x64x64 blocking that is 1 MiB live — comfortably inside the ~16 MiB
@@ -29,13 +38,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .booth_rows import bbm_rows_product, split_signed
+from ..core.booth import num_pp_rows
+from .booth_rows import (bbm_rows_product_precoded, booth_precode,
+                         split_signed)
 
-__all__ = ["bbm_matmul_kernel", "bbm_matmul"]
+__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_precoded"]
 
 
-def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
-                      shift: int, n_k: int):
+def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,
+                      kind: int, shift: int, n_k: int):
     """One (bm, bn) output tile; grid axis 2 streams K blocks."""
     k_idx = pl.program_id(2)
 
@@ -44,11 +55,11 @@ def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...]                      # (bm, bk) int32, wl-bit codes
-    w = w_ref[...]                      # (bk, bn) int32, wl-bit codes
     _, x_s = split_signed(x, wl)
-    wu = (w & ((1 << wl) - 1))[None, :, :]                   # (1, bk, bn)
     a = x_s[:, :, None]                                      # (bm, bk, 1)
-    prod = bbm_rows_product(a, wu, wl=wl, vbl=vbl, kind=kind)
+    # (wl//2, bk, bn) digit planes; row r broadcasts (bk, bn) against a
+    prod = bbm_rows_product_precoded(a, wm_ref[...], ws_ref[...],
+                                     wl=wl, vbl=vbl, kind=kind)
     # per-product rescale then reduce over the k axis of the tile
     if shift:
         prod = prod >> shift
@@ -57,26 +68,54 @@ def bbm_matmul_kernel(x_ref, w_ref, o_ref, *, wl: int, vbl: int, kind: int,
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
                                              "bm", "bk", "bn", "interpret"))
-def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
-               bm: int = 64, bk: int = 64, bn: int = 64,
-               interpret: bool = False):
-    """Tiled bit-exact approximate matmul.  x: (M, K) w: (K, N), int32 codes."""
+def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
+                        shift: int = 0, bm: int = 64, bk: int = 64,
+                        bn: int = 64, interpret: bool = False):
+    """Tiled approximate matmul on precoded weight-digit planes.
+
+    x: (M, K) int32 codes; wmag, wneg: (wl//2, K, N) planes from
+    ``booth_precode`` of the (K, N) weight code matrix.
+    """
     mm, kk = x.shape
-    kk2, nn = w.shape
-    assert kk == kk2
+    n_rows, kk2, nn = wmag.shape
+    if wmag.shape != wneg.shape:
+        raise ValueError(f"mag/neg plane shapes differ: "
+                         f"{wmag.shape} vs {wneg.shape}")
+    if n_rows != num_pp_rows(wl) or kk != kk2:
+        raise ValueError(f"digit planes {wmag.shape} do not match "
+                         f"wl={wl}, K={kk}")
     grid = (pl.cdiv(mm, bm), pl.cdiv(nn, bn), pl.cdiv(kk, bk))
     kernel = functools.partial(bbm_matmul_kernel, wl=wl, vbl=vbl, kind=kind,
                                shift=shift, n_k=grid[2])
+    plane_spec = pl.BlockSpec((n_rows, bk, bn), lambda i, j, k: (0, k, j))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            plane_spec,
+            plane_spec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w)
+    )(x, wmag, wneg)
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
+                                             "bm", "bk", "bn", "interpret"))
+def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+               bm: int = 64, bk: int = 64, bn: int = 64,
+               interpret: bool = False):
+    """Tiled bit-exact approximate matmul.  x: (M, K) w: (K, N), int32 codes.
+
+    Thin raw-code wrapper: precodes ``w`` once (hoisting the recode out of
+    the grid, which re-reads every weight block M/bm times) and dispatches
+    to ``bbm_matmul_precoded``.
+    """
+    wmag, wneg = booth_precode(w, wl)
+    return bbm_matmul_precoded(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
+                               shift=shift, bm=bm, bk=bk, bn=bn,
+                               interpret=interpret)

@@ -1,25 +1,51 @@
-"""Shared Broken-Booth row accumulation for the Pallas kernels.
+"""Shared Broken-Booth row arithmetic for the Pallas kernels, split into a
+decode phase and an accumulate phase.
 
-One unrolled, shift-only implementation of the paper's partial-product
-truncation, used by both ``bbm_matmul`` and the FIR filterbank kernel so the
-Booth row loop is written exactly once on the kernel side.  It mirrors the
-closed forms in ``core.bbm`` (``bbm_type0`` / ``bbm_type1``) but avoids
-integer division (``floor_divide``) in favour of arithmetic shifts, which is
-what the TPU VPU actually supports; ``(x >> m) << m`` is the same
-floor-toward ``-inf`` truncation for two's-complement values.
+Hardware Booth multipliers recode the multiplier operand exactly once per
+product; in the FIR filterbank and ``bbm_matmul`` one operand — the tap
+bank / weight matrix — is *constant* across samples, time blocks and
+requests, so its radix-4 digits never change.  The split mirrors that:
 
-Everything is resolved at trace time: the row loop is unrolled over the
-``wl/2`` radix-4 rows and the per-row mask widths are Python ints, so the
-helper is safe to call from inside a Pallas kernel body as well as from
-plain jitted code.
+  ``booth_precode(bu, wl)``
+      decode phase: unsigned wl-bit codes -> per-row digit planes
+      ``(mag, neg)``, each of shape ``(wl//2,) + bu.shape``.  ``mag`` is the
+      digit magnitude in {0, 1, 2}; ``neg`` is the raw ``b_{2r+1}`` bit —
+      the hardware S/sign flag (the 111 "negative zero" triplet has
+      ``mag = 0, neg = 1``, which Type1 truncation exposes).  Computed once
+      per bank, outside the kernel grid.
+
+  ``bbm_rows_product_precoded(a_s, mag, neg, ...)``
+      accumulate phase.  On TPU it is multiply-free: digits are in
+      {-2,-1,0,1,2}, so each row contribution is a select among
+      ``{0, a_s, a_s << 1}`` with a negate — shift/select/add only, which
+      is what the silicon's partial product generators do and what the VPU
+      likes (32-bit multiplies are multi-pass there, selects are not).
+      Off-TPU (XLA CPU, the Pallas interpreter) the same planes feed a
+      one-multiply-per-row form instead, because there ``d * a_s`` is a
+      single fast vector op and a select chain is three.  Both forms are
+      bit-identical; the ``(x >> m) << m`` truncation (the paper's VBL
+      nullification; floor toward -inf for two's complement) is unchanged.
+
+The row planes are stacked on a *leading* axis so kernel BlockSpecs keep
+the large dimensions last (TPU lane/sublane friendly): a ``(C, taps)`` bank
+precodes to ``(wl//2, C, taps)`` planes tiled exactly like the bank itself.
+
+``bbm_rows_product`` is the raw-code wrapper (decode + accumulate in one
+call) kept for callers that do not hoist the recode.  Everything is
+resolved at trace time: the row loop is unrolled over the ``wl/2`` radix-4
+rows and the per-row mask widths are Python ints, so both phases are safe
+to call from inside a Pallas kernel body as well as from plain jitted code.
+Bit-exact to the closed forms in ``core.bbm`` (``bbm_type0`` / ``bbm_type1``).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..core.booth import num_pp_rows
 
-__all__ = ["bbm_rows_product", "split_signed"]
+__all__ = ["bbm_rows_product", "bbm_rows_product_precoded", "booth_precode",
+           "split_signed"]
 
 
 def split_signed(x, wl: int):
@@ -30,15 +56,18 @@ def split_signed(x, wl: int):
     return xu, jnp.where(xu >= sign, xu - (1 << wl), xu)
 
 
-def bbm_rows_product(a_s, bu, *, wl: int, vbl: int, kind: int):
-    """Broken-Booth product of signed ``a_s`` and unsigned wl-bit ``bu``.
+def booth_precode(bu, wl: int):
+    """Decode phase: radix-4 digit planes of unsigned wl-bit codes ``bu``.
 
-    ``a_s`` and ``bu`` are int32 arrays with broadcast-compatible shapes;
-    the result has the broadcast shape.  Bit-identical to
-    ``core.bbm.bbm_mul(a, b, wl, vbl, kind)`` for in-range operands.
-    ``vbl = 0`` reduces both kinds to the exact Booth product.
+    Returns ``(mag, neg)`` int32 arrays of shape ``(wl//2,) + bu.shape``:
+    ``mag[r]`` the magnitude of Booth digit r in {0, 1, 2} and ``neg[r]``
+    the raw ``b_{2r+1}`` sign bit.  The signed digit is ``d = mag`` when
+    ``neg == 0`` and ``d = -mag`` when ``neg == 1`` (the 111 triplet gives
+    ``mag = 0, neg = 1``).  Call once per constant operand and feed the
+    planes to ``bbm_rows_product_precoded``.
     """
-    prod = None
+    bu = jnp.asarray(bu, jnp.int32) & ((1 << wl) - 1)
+    mags, negs = [], []
     prev_hi = None
     for r in range(num_pp_rows(wl)):
         # booth digit of b for row r: d = -2*b_hi + b_mid + b_lo
@@ -47,17 +76,72 @@ def bbm_rows_product(a_s, bu, *, wl: int, vbl: int, kind: int):
         b_lo = jnp.zeros_like(b_mid) if r == 0 else prev_hi
         prev_hi = b_hi
         d = -2 * b_hi + b_mid + b_lo
+        mags.append(jnp.abs(d))
+        negs.append(b_hi)
+    return jnp.stack(mags), jnp.stack(negs)
+
+
+def bbm_rows_product_precoded(a_s, mag, neg, *, wl: int, vbl: int, kind: int,
+                              multiply_free: bool | None = None):
+    """Accumulate phase: Broken-Booth product from precoded digit planes.
+
+    ``a_s`` is a signed int32 array; ``mag[r]`` / ``neg[r]`` must broadcast
+    against it (planes from ``booth_precode``).  Bit-identical to
+    ``core.bbm.bbm_mul`` for in-range operands; ``vbl = 0`` reduces both
+    kinds to the exact Booth product.
+
+    ``multiply_free`` picks the row-contribution form (same values either
+    way, decided at trace time):
+
+      True   select among ``{0, a_s, a_s << 1}`` + negate — the silicon
+             partial-product generator, and the fast form on the TPU VPU,
+             where a 32-bit multiply is multi-pass and a select is not.
+      False  one ``d * a_s`` multiply per row — the fast form everywhere
+             XLA lowers to real vector ISAs (CPU, the interpreter), where
+             an int32 multiply is a single op and the select chain is
+             three.
+      None   auto: multiply-free on TPU backends, multiply elsewhere.
+    """
+    if multiply_free is None:
+        multiply_free = jax.default_backend() == "tpu"
+    a2 = a_s << 1                         # the shared "2A" generate
+    prod = None
+    for r in range(num_pp_rows(wl)):
+        m_r = mag[r]
+        s_r = neg[r]
         m = max(0, vbl - 2 * r)           # bits nullified in this row
         if kind == 0:
-            rows = d * a_s
+            if multiply_free:
+                pos = jnp.where(m_r == 2, a2, jnp.where(m_r == 1, a_s, 0))
+                rows = jnp.where(s_r == 1, -pos, pos)
+            else:
+                # fold the sign into the (small) digit plane: one full-size
+                # multiply per row, no full-size select at all
+                rows = jnp.where(s_r == 1, -m_r, m_r) * a_s
             contrib = (rows >> m) << m    # floor for two's complement
         else:
-            mag = jnp.abs(d)
-            pos = mag * a_s
-            rows = jnp.where(b_hi == 1, -pos - 1, pos)
+            if multiply_free:
+                pos = jnp.where(m_r == 2, a2, jnp.where(m_r == 1, a_s, 0))
+            else:
+                pos = m_r * a_s
+            rows = jnp.where(s_r == 1, -pos - 1, pos)
             contrib = (rows >> m) << m
             if m == 0:                    # S dot survives only at m == 0
-                contrib = contrib + b_hi
+                contrib = contrib + s_r
         term = contrib << (2 * r)
         prod = term if prod is None else prod + term
     return prod
+
+
+def bbm_rows_product(a_s, bu, *, wl: int, vbl: int, kind: int):
+    """Broken-Booth product of signed ``a_s`` and unsigned wl-bit ``bu``.
+
+    Raw-code wrapper: decodes ``bu`` then accumulates, for callers whose
+    multiplier operand is not constant (or not worth hoisting).  ``a_s``
+    and ``bu`` are int32 arrays with broadcast-compatible shapes; the
+    result has the broadcast shape.  Bit-identical to
+    ``core.bbm.bbm_mul(a, b, wl, vbl, kind)`` for in-range operands.
+    """
+    mag, neg = booth_precode(bu, wl)
+    return bbm_rows_product_precoded(a_s, mag, neg, wl=wl, vbl=vbl,
+                                     kind=kind)

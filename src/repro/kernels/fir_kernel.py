@@ -1,5 +1,5 @@
 """Pallas TPU kernel: multi-channel direct-form FIR filterbank with
-Broken-Booth tap products.
+Broken-Booth tap products, precoded-digit datapath.
 
 The paper's own workload as a TPU kernel, scaled out: ``C`` independent
 channels, each with its own wl-bit tap bank, computed as
@@ -10,8 +10,20 @@ with the closed-form Broken-Booth product per tap (Type0/Type1) and an
 optional per-product arithmetic right shift (the fixed-point MAC rescale
 that keeps the int32 accumulator inside its envelope at wl = 16).
 
-Streaming layout (this is the scaling story vs. the old single-channel
-kernel, which parked the whole padded signal in VMEM):
+Precoded datapath (the perf story of this kernel): the tap bank is the
+Booth *multiplier* operand and it is constant across the whole grid, so
+its radix-4 digits are decoded exactly once per call — outside the kernel
+— by ``booth_rows.booth_precode`` and streamed in as two digit planes of
+shape ``(wl//2, C, taps)``, BlockSpec-tiled like the bank itself.  The
+kernel body (``bbm_rows_product_precoded``) is then multiply-free:
+each Booth row is a select among ``{0, a_s, a_s << 1}`` plus a negate,
+instead of re-deriving digits from the raw code inside every tap of every
+``(channels, time)`` grid step.  ``fir_bbm_bank`` keeps the raw-code
+signature and precodes internally; ``fir_bbm_bank_precoded`` accepts
+already-decoded planes so callers with long-lived banks (serving, the
+sharded filterbank) pay the decode once per bank lifetime.
+
+Streaming layout:
 
   * 2-D grid over (channel blocks, time blocks); BlockSpec tiles of shape
     ``(bc, bt)`` stream through VMEM, so signal length is bounded by HBM,
@@ -27,10 +39,6 @@ kernel, which parked the whole padded signal in VMEM):
     keeps its own scratch, and every channel block re-zeroes the halo at
     its first time step, so the carry never crosses channel blocks.
 
-The Booth row loop itself lives in ``booth_rows.bbm_rows_product`` and is
-shared with ``bbm_matmul`` — the kernels no longer hand-inline their own
-copies of the paper's arithmetic.
-
 Overflow envelope: taps * 2^(2*wl - 1 - shift) < 2^31 (checked on entry;
 at the paper's operating point of 31 taps x wl = 16 this requires
 ``shift >= 5`` — see ``min_safe_shift``).
@@ -44,9 +52,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .booth_rows import bbm_rows_product, split_signed
+from ..core.booth import num_pp_rows
+from .booth_rows import (bbm_rows_product_precoded, booth_precode,
+                         split_signed)
 
-__all__ = ["fir_bbm", "fir_bbm_bank", "min_safe_shift"]
+__all__ = ["fir_bbm", "fir_bbm_bank", "fir_bbm_bank_precoded",
+           "min_safe_shift"]
 
 
 def min_safe_shift(taps: int, wl: int) -> int:
@@ -64,8 +75,8 @@ def _check_envelope(taps: int, wl: int, shift: int) -> None:
             f"shift={shift}; raise `shift` to >= {min_safe_shift(taps, wl)}")
 
 
-def _fir_bank_kernel(x_ref, h_ref, o_ref, halo_ref, *, wl: int, vbl: int,
-                     kind: int, taps: int, shift: int, bt: int):
+def _fir_bank_kernel(x_ref, hm_ref, hs_ref, o_ref, halo_ref, *, wl: int,
+                     vbl: int, kind: int, taps: int, shift: int, bt: int):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -76,15 +87,17 @@ def _fir_bank_kernel(x_ref, h_ref, o_ref, halo_ref, *, wl: int, vbl: int,
 
     # halo exchange: taps-1 raw codes deposited by the previous time block
     xs = jnp.concatenate([halo_ref[...], x_ref[...]], axis=1)
-    h = h_ref[...]                          # (bc, taps) int32 codes
-    mask = (1 << wl) - 1
+    _, xs_s = split_signed(xs, wl)          # sign-extend once per block
+    hm = hm_ref[...]                        # (wl//2, bc, taps) digit planes
+    hs = hs_ref[...]
 
     acc = jnp.zeros(o_ref.shape, jnp.int32)
     for k in range(taps):
         # window of samples feeding tap k for each output in the block
-        _, a_s = split_signed(xs[:, taps - 1 - k:taps - 1 - k + bt], wl)
-        bu = (h[:, k] & mask)[:, None]      # per-channel coefficient
-        prod = bbm_rows_product(a_s, bu, wl=wl, vbl=vbl, kind=kind)
+        a_s = xs_s[:, taps - 1 - k:taps - 1 - k + bt]
+        prod = bbm_rows_product_precoded(
+            a_s, hm[:, :, k, None], hs[:, :, k, None],
+            wl=wl, vbl=vbl, kind=kind)
         if shift:
             prod = prod >> shift
         acc = acc + prod
@@ -94,19 +107,25 @@ def _fir_bank_kernel(x_ref, h_ref, o_ref, halo_ref, *, wl: int, vbl: int,
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
                                              "bc", "bt", "interpret"))
-def fir_bbm_bank(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
-                 bc: int = 8, bt: int = 512, interpret: bool = False):
-    """Bit-exact Broken-Booth FIR filterbank.
+def fir_bbm_bank_precoded(x, hmag, hneg, *, wl: int, vbl: int, kind: int = 0,
+                          shift: int = 0, bc: int = 8, bt: int = 512,
+                          interpret: bool = False):
+    """Broken-Booth FIR filterbank on precoded tap-digit planes.
 
     x: (C, N) int32 wl-bit signal codes, one row per channel.
-    h: (C, taps) int32 wl-bit tap codes (per-channel banks) or (taps,)
-       to share one bank across all channels.
+    hmag, hneg: (wl//2, C, taps) int32 digit planes from
+        ``booth_precode`` of the (C, taps) tap bank — decoded once per
+        bank, reused across every call that shares the bank.
     Returns (C, N) int32 accumulator values (sum of shifted products).
     """
     channels, n = x.shape
-    if h.ndim == 1:
-        h = jnp.broadcast_to(h[None, :], (channels, h.shape[0]))
-    taps = h.shape[1]
+    n_rows, hc, taps = hmag.shape
+    if hmag.shape != hneg.shape:
+        raise ValueError(f"mag/neg plane shapes differ: "
+                         f"{hmag.shape} vs {hneg.shape}")
+    if n_rows != num_pp_rows(wl) or hc != channels:
+        raise ValueError(f"digit planes {hmag.shape} do not match "
+                         f"wl={wl}, channels={channels}")
     _check_envelope(taps, wl, shift)
 
     bc = min(bc, channels)
@@ -115,16 +134,20 @@ def fir_bbm_bank(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
     nt = pl.cdiv(n, bt)
     # tail padding only; the taps-1 history halo travels through scratch
     xp = jnp.pad(x, ((0, nc * bc - channels), (0, nt * bt - n)))
-    hp = jnp.pad(h, ((0, nc * bc - channels), (0, 0)))
+    pad_c = ((0, 0), (0, nc * bc - channels), (0, 0))
+    hmp = jnp.pad(hmag, pad_c)
+    hsp = jnp.pad(hneg, pad_c)
 
     kernel = functools.partial(_fir_bank_kernel, wl=wl, vbl=vbl, kind=kind,
                                taps=taps, shift=shift, bt=bt)
+    plane_spec = pl.BlockSpec((n_rows, bc, taps), lambda c, t: (0, c, 0))
     out = pl.pallas_call(
         kernel,
         grid=(nc, nt),
         in_specs=[
             pl.BlockSpec((bc, bt), lambda c, t: (c, t)),
-            pl.BlockSpec((bc, taps), lambda c, t: (c, 0)),
+            plane_spec,
+            plane_spec,
         ],
         out_specs=pl.BlockSpec((bc, bt), lambda c, t: (c, t)),
         out_shape=jax.ShapeDtypeStruct((nc * bc, nt * bt), jnp.int32),
@@ -132,8 +155,31 @@ def fir_bbm_bank(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(xp, hp)
+    )(xp, hmp, hsp)
     return out[:channels, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
+                                             "bc", "bt", "interpret"))
+def fir_bbm_bank(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+                 bc: int = 8, bt: int = 512, interpret: bool = False):
+    """Bit-exact Broken-Booth FIR filterbank from raw tap codes.
+
+    x: (C, N) int32 wl-bit signal codes, one row per channel.
+    h: (C, taps) int32 wl-bit tap codes (per-channel banks) or (taps,)
+       to share one bank across all channels.
+    Returns (C, N) int32 accumulator values (sum of shifted products).
+
+    Thin raw-code wrapper: precodes ``h`` once (outside the grid) and
+    dispatches to ``fir_bbm_bank_precoded``.
+    """
+    channels = x.shape[0]
+    if h.ndim == 1:
+        h = jnp.broadcast_to(h[None, :], (channels, h.shape[0]))
+    hmag, hneg = booth_precode(h, wl)
+    return fir_bbm_bank_precoded(x, hmag, hneg, wl=wl, vbl=vbl, kind=kind,
+                                 shift=shift, bc=bc, bt=bt,
+                                 interpret=interpret)
 
 
 def fir_bbm(x, h, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,

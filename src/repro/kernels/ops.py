@@ -10,31 +10,50 @@ import jax
 import jax.numpy as jnp
 
 from .bbm_matmul import bbm_matmul as _bbm_matmul
+from .bbm_matmul import bbm_matmul_precoded as _bbm_matmul_precoded
 from .fir_kernel import fir_bbm_bank as _fir_bbm_bank
+from .fir_kernel import fir_bbm_bank_precoded as _fir_bbm_bank_precoded
 from .flash_attention import flash_attention as _flash_attention
 from .quant_matmul import quant_matmul as _quant_matmul
 
-__all__ = ["on_tpu", "bbm_matmul", "fir_filterbank", "quant_matmul",
-           "flash_attention"]
+__all__ = ["on_tpu", "bbm_matmul", "bbm_matmul_precoded", "fir_filterbank",
+           "fir_filterbank_precoded", "quant_matmul", "flash_attention"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
-               interpret=None, **block_kw):
-    """Bit-exact Broken-Booth matmul (int32 codes in/out)."""
-    k = x.shape[-1]
+def _matmul_envelope(k: int, wl: int, shift: int) -> None:
     # int32 overflow envelope: K * max|product >> shift| < 2^31
     if k * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
         raise ValueError(
             f"accumulation may overflow int32: K={k}, wl={wl}, shift={shift};"
             " raise `shift` (fixed-point rescale) or reduce K")
+
+
+def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
+               interpret=None, **block_kw):
+    """Bit-exact Broken-Booth matmul (int32 codes in/out)."""
+    _matmul_envelope(x.shape[-1], wl, shift)
     if interpret is None:
         interpret = not on_tpu()
     return _bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
                        interpret=interpret, **block_kw)
+
+
+def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
+                        shift: int = 0, interpret=None, **block_kw):
+    """Broken-Booth matmul on precoded weight-digit planes.
+
+    wmag, wneg: (wl//2, K, N) planes from ``kernels.booth_precode`` —
+    decode the constant weight operand once, reuse across calls.
+    """
+    _matmul_envelope(x.shape[-1], wl, shift)
+    if interpret is None:
+        interpret = not on_tpu()
+    return _bbm_matmul_precoded(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
+                                shift=shift, interpret=interpret, **block_kw)
 
 
 def fir_filterbank(x, h, *, wl: int, vbl: int, kind: int = 0,
@@ -49,6 +68,22 @@ def fir_filterbank(x, h, *, wl: int, vbl: int, kind: int = 0,
         interpret = not on_tpu()
     return _fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift,
                          interpret=interpret, **block_kw)
+
+
+def fir_filterbank_precoded(x, hmag, hneg, *, wl: int, vbl: int,
+                            kind: int = 0, shift: int = 0, interpret=None,
+                            **block_kw):
+    """Filterbank on precoded tap-digit planes (int32 codes in/out).
+
+    x: (C, N) signal codes; hmag, hneg: (wl//2, C, taps) digit planes from
+    ``kernels.booth_precode`` of the tap bank — decode once per bank, reuse
+    across every flush that shares it.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _fir_bbm_bank_precoded(x, hmag, hneg, wl=wl, vbl=vbl, kind=kind,
+                                  shift=shift, interpret=interpret,
+                                  **block_kw)
 
 
 def quant_matmul(x, w, s_x, s_w, mu=0.0, sigma=0.0, *, wl: int = 16,

@@ -1,5 +1,5 @@
 """Distribution layer: logical sharding rules, compressed collectives, and
 the channel-sharded FIR filterbank."""
-from .filterbank import sharded_filterbank
+from .filterbank import precode_filterbank, sharded_filterbank
 
-__all__ = ["sharded_filterbank"]
+__all__ = ["precode_filterbank", "sharded_filterbank"]

@@ -7,6 +7,13 @@ shard — the Pallas kernel on TPU, the pure-jnp closed form elsewhere — so a
 (C, N) batch is served by ``mesh.shape[axis]`` devices with no collectives
 at all (the sharding *is* the decomposition).
 
+The tap bank is the Booth multiplier operand and is constant across the
+batch, so its radix-4 digits are decoded exactly once — *outside* the
+shard_map — and the (wl//2, C, taps) digit planes are what gets sharded
+along the channel axis; each shard's kernel runs the multiply-free
+accumulate phase only.  Long-lived callers can decode once per bank
+lifetime with ``precode_filterbank`` and pass the planes to every call.
+
 Everything is integer-code level: (C, N) int32 wl-bit signal codes in,
 (C, N) int32 accumulator values out, bit-identical to the unsharded kernel
 because each channel's computation is untouched by the split.
@@ -19,24 +26,44 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..kernels.fir_kernel import _check_envelope, fir_bbm_bank
+from ..kernels.booth_rows import booth_precode
+from ..kernels.fir_kernel import _check_envelope, fir_bbm_bank_precoded
 from ..kernels.ops import on_tpu
 from ..kernels.ref import fir_bank_ref
 
-__all__ = ["sharded_filterbank"]
+__all__ = ["precode_filterbank", "sharded_filterbank"]
+
+
+def precode_filterbank(h, *, wl: int, channels: int | None = None):
+    """Decode a (C, taps) tap bank once -> (hmag, hneg) digit planes.
+
+    h: (C, taps) int32 codes, or (taps,) to share one bank across
+    ``channels`` rows.  The planes feed ``sharded_filterbank(h_planes=...)``
+    across any number of calls that reuse the bank.
+    """
+    h = jnp.asarray(h)
+    if h.ndim == 1:
+        if channels is None:
+            raise ValueError("channels is required to broadcast a shared "
+                             "(taps,) bank")
+        h = jnp.broadcast_to(h[None, :], (channels, h.shape[0]))
+    return booth_precode(h, wl)
 
 
 def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
                        shift: int = 0, axis: str = "data",
                        use_kernel: bool | None = None, bc: int = 8,
-                       bt: int = 512):
+                       bt: int = 512, h_planes=None):
     """Filterbank over ``mesh`` with channels sharded on mesh axis ``axis``.
 
     x: (C, N) int32 codes, h: (C, taps) int32 codes (or (taps,) shared).
     C must divide by the mesh axis size; pad channels first if it does not.
     ``use_kernel=None`` picks the Pallas kernel on TPU and the jnp closed
     form on host backends (where the interpreter inside shard_map would
-    only slow things down).
+    only slow things down).  ``h_planes`` takes the digit planes from
+    ``precode_filterbank`` so a long-lived bank is decoded once, not once
+    per call; when omitted the decode still runs only once per call,
+    outside the shard_map.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -53,15 +80,28 @@ def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
         use_kernel = on_tpu()
 
     if use_kernel:
-        apply_fn = functools.partial(fir_bbm_bank, wl=wl, vbl=vbl, kind=kind,
-                                     shift=shift, bc=bc, bt=bt,
+        if h_planes is None:
+            h_planes = booth_precode(h, wl)     # once, outside the shard_map
+        hmag, hneg = h_planes
+        if hmag.shape[1] != x.shape[0]:
+            raise ValueError(f"h_planes cover {hmag.shape[1]} channels, "
+                             f"x has {x.shape[0]}")
+        apply_fn = functools.partial(fir_bbm_bank_precoded, wl=wl, vbl=vbl,
+                                     kind=kind, shift=shift, bc=bc, bt=bt,
                                      interpret=not on_tpu())
-    else:
-        apply_fn = functools.partial(fir_bank_ref, wl=wl, vbl=vbl, kind=kind,
-                                     shift=shift)
+        fn = shard_map(
+            lambda xs, hm, hn: apply_fn(xs, hm, hn),
+            mesh=mesh,
+            in_specs=(P(axis, None), P(None, axis, None),
+                      P(None, axis, None)),
+            out_specs=P(axis, None),
+            check_rep=False,
+        )
+        return fn(x, hmag, hneg)
 
     fn = shard_map(
-        lambda xs, hs: apply_fn(xs, hs),
+        lambda xs, hs: fir_bank_ref(xs, hs, wl=wl, vbl=vbl, kind=kind,
+                                    shift=shift),
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
         out_specs=P(axis, None),

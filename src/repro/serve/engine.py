@@ -16,6 +16,10 @@ fixed slot count, requests enter free slots, finished slots are recycled.
 workload: FIR filtering requests accumulate into channel slots and are
 served by a single multi-channel Broken-Booth filterbank dispatch
 (``dsp.fir_apply``), one kernel call per flush instead of one per signal.
+The tap banks are fixed for the engine's lifetime, so their quantization
+and Booth recode happen exactly once, at construction, via
+``dsp.PrecodedBank``; every flush gathers the cached digit planes by
+request index instead of re-deriving them.
 """
 from __future__ import annotations
 
@@ -120,16 +124,20 @@ class FilterbankEngine:
     """Batched FIR serving: N pending requests -> one filterbank dispatch.
 
     Tap banks are designed/passed once at construction; each request names
-    the bank that should filter it.  ``flush`` pads the pending signals to
-    a common length, stacks them into a (C, N) batch with the per-request
-    tap banks gathered into a (C, taps) array, runs the whole batch through
-    ``dsp.fir_apply`` (host or Pallas backend) in a single call, and
-    returns each request's output trimmed back to its own length.
+    the bank that should filter it.  Construction also quantizes and
+    Booth-precodes the banks exactly once (``dsp.PrecodedBank``) — the
+    decode phase of the Broken-Booth datapath never runs again for the
+    engine's lifetime.  ``flush`` pads the pending signals to a common
+    length, stacks them into a (C, N) batch, gathers the per-request banks
+    out of the precoded cache (an index, not a re-quantize/re-recode), runs
+    the whole batch through ``dsp.fir_apply`` (host or Pallas backend) in a
+    single call, and returns each request's output trimmed back to its own
+    length.
     """
 
     def __init__(self, h_banks: np.ndarray, spec, *, backend: str = "host",
                  max_channels: int = 64, block: int = 512):
-        from ..dsp.fir import fir_apply
+        from ..dsp.fir import PrecodedBank, fir_apply
         h_banks = np.atleast_2d(np.asarray(h_banks, np.float64))
         self.h_banks = h_banks
         self.spec = spec
@@ -137,6 +145,11 @@ class FilterbankEngine:
         self.max_channels = max_channels
         self.block = block
         self._apply = fir_apply
+        # decode phase hoisted out of the serving hot loop: built once here,
+        # reused (gathered by request index) across every flush.  The host
+        # backend consumes only the quantized codes, so don't decode (or
+        # later gather) digit planes it would never read.
+        self.bank = PrecodedBank(h_banks, spec, precode=backend != "host")
         self._pending: List[FilterRequest] = []
         self._next_rid = 0
 
@@ -158,7 +171,7 @@ class FilterbankEngine:
             x = np.zeros((len(batch), n))
             for c, r in enumerate(batch):
                 x[c, : len(r.signal)] = r.signal
-            h = self.h_banks[[r.bank for r in batch]]
+            h = self.bank.take([r.bank for r in batch])
             # dispatch before dequeue: a raising backend leaves the batch
             # queued so a later flush can still serve it
             y = self._apply(x, h, self.spec, backend=self.backend,
