@@ -55,6 +55,31 @@ def main():
                       backend="pallas-interpret")
     print(f"  identical to raw taps: {np.array_equal(y_kern, y_pre)}")
 
+    print()
+    print("Dot form (exact contraction on the matmul units + truncated "
+          "rows):")
+    # the identity behind it: bbm(a, b) == a*b - correction(a_low, digits)
+    from repro.core.bbm import bbm_mul
+    from repro.kernels import booth_correction, booth_precode
+    from repro.kernels.booth_rows import split_signed
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 1 << 16, 4096)
+    b = rng.integers(0, 1 << 16, 4096)
+    a_s = split_signed(a, 16)[1]
+    mag, neg = booth_precode(b, 16)
+    b_s = np.where(b >= 1 << 15, b - (1 << 16), b)
+    corr = np.asarray(booth_correction(a_s, mag, neg, wl=16, vbl=13,
+                                       kind=0), np.int64)
+    ident = np.array_equal(np.asarray(bbm_mul(a, b, 16, 13), np.int64),
+                           np.asarray(a_s, np.int64) * b_s - corr)
+    print(f"  identity bbm(a,b) == a*b - correction(a_low): {ident}")
+    y_rows = fir_apply(x, bank.take([0, 1, 0, 1]), backend="host",
+                       form="rows")
+    y_dot = fir_apply(x, bank.take([0, 1, 0, 1]), backend="host",
+                      form="dot")
+    print(f"  dot form bit-identical to rows form: "
+          f"{np.array_equal(y_rows, y_dot)}")
+
 
 if __name__ == "__main__":
     main()

@@ -60,8 +60,9 @@ import numpy as np
 from scipy.signal import remez
 
 from ..core.multipliers import MulSpec, mul
-from ..kernels.booth_rows import booth_precode
-from ..kernels.fir_kernel import min_safe_shift
+from ..kernels.booth_rows import booth_precode, resolve_form
+from ..kernels.fir_kernel import (_DOT_WINDOW_BUDGET, fir_bbm_bank_precoded,
+                                  min_safe_shift)
 from .fixed_point import requant_scale
 
 __all__ = ["design_lowpass", "fir_apply_real", "fir_apply",
@@ -224,11 +225,15 @@ class PrecodedBank:
     ``take(idx)`` gathers per-request banks into a request-ordered view —
     a cheap index into the cached codes/planes, never a re-quantize or
     re-decode.  For Booth-family specs at wl <= 16 the digit planes
-    (wl//2, B, taps) live on device, ready for the Pallas kernel; the host
-    backend reuses the cached integer codes.  ``precode=False`` defers the
-    digit decode until ``planes`` is first read (the host backend never
-    reads it); the default decodes eagerly so a serving engine pays the
-    whole decode phase at construction, not on the first request.
+    (wl//2, B, taps) live on device, ready for either accumulate form:
+    the rows kernel walks them as partial-product generators, and the dot
+    form reads them twice — reconstructing the exact contraction operand
+    (``booth_value``) and driving the low-bit correction
+    (``booth_correction``), so they are also the dot form's correction
+    planes and *both* backends now consume them.  ``precode=False``
+    defers the digit decode until ``planes`` is first read; the default
+    decodes eagerly so a serving engine pays the whole decode phase at
+    construction, not on the first request.
     """
 
     def __init__(self, h, spec: MulSpec, *, precode: bool = True):
@@ -279,7 +284,7 @@ class PrecodedBank:
 def fir_apply(x: np.ndarray, h, spec: MulSpec | None = None, *,
               backend: str = "host", datapath: str = "full",
               shift: int | None = None, bc: int = 8,
-              block: int = 512) -> np.ndarray:
+              block: int = 512, form: str | None = None) -> np.ndarray:
     """Bit-exact fixed-point filtering with the given multiplier spec.
 
     x: signal(s), (N,) or (C, N); h: real taps, (taps,) or (C, taps) for
@@ -301,7 +306,16 @@ def fir_apply(x: np.ndarray, h, spec: MulSpec | None = None, *,
     rescale).  ``None`` selects 0 when the int32 envelope allows it and the
     minimal safe value otherwise (wl = 16 at 31 taps needs shift = 5), so
     host and Pallas backends agree by default.
+
+    form — Booth-family accumulate form, resolved at trace time and
+    bit-identical either way: "rows" walks the wl/2 partial-product rows
+    per tap (the silicon emulation), "dot" puts the dominant exact
+    contraction on the matmul units and walks only the truncated rows
+    (``kernels.booth_rows``), ``None`` auto-picks the dot form.  Applies
+    to the Booth-family hot paths of both backends; the exact / wlbit /
+    non-Booth paths ignore "rows" and reject an explicit "dot".
     """
+    resolve_form(form)     # validate early; selection happens per path
     bank = h if isinstance(h, PrecodedBank) else None
     if bank is not None:
         if spec is not None and spec != bank.spec:
@@ -333,22 +347,25 @@ def fir_apply(x: np.ndarray, h, spec: MulSpec | None = None, *,
     amp = _amp(x2)
     xq = _quantize64(x2 * amp, wl)
     if bank is None:
-        # one-shot bank: the host backend never reads the digit planes, so
-        # defer the decode (the pallas path triggers it on first read)
+        # one-shot bank: defer the decode to the first ``planes`` read —
+        # the Booth-family dot path (either backend) triggers it once per
+        # call, and the rows/exact/fallback host paths never pay it
         bank = PrecodedBank(h2, spec, precode=False)
     if backend in ("pallas", "pallas-interpret"):
         y = _apply_pallas(xq, bank, datapath=datapath, shift=shift,
                           amp=amp, bc=bc, block=block,
-                          interpret=backend == "pallas-interpret")
+                          interpret=backend == "pallas-interpret",
+                          form=form)
     elif backend == "host":
-        y = _apply_host(xq, bank, datapath=datapath, shift=shift, amp=amp)
+        y = _apply_host(xq, bank, datapath=datapath, shift=shift, amp=amp,
+                        form=form)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return y[0] if squeeze else y
 
 
 def _apply_pallas(xq, bank: PrecodedBank, *, datapath, shift, amp, bc,
-                  block, interpret):
+                  block, interpret, form=None):
     from ..kernels.ops import fir_filterbank_precoded
     spec = bank.spec
     if spec.name not in BBM_KINDS:
@@ -362,25 +379,27 @@ def _apply_pallas(xq, bank: PrecodedBank, *, datapath, shift, amp, bc,
         raise ValueError("the int32 kernel datapath supports wl <= 16")
     vbl = 0 if spec.name == "booth" else spec.param
     # fused code-level pipeline: one transfer in, one jitted dispatch on the
-    # cached digit planes (sign-extend + multiply-free kernel), one out
+    # cached digit planes (sign-extend + accumulate form), one out
     hmag, hneg = bank.planes
     out = fir_filterbank_precoded(jnp.asarray(_codes32(xq, wl)), hmag, hneg,
                                   wl=wl, vbl=vbl, kind=BBM_KINDS[spec.name],
                                   shift=shift, interpret=interpret, bc=bc,
-                                  bt=block)
+                                  bt=block, form=form)
     return _descale(np.asarray(out, np.float64), wl, shift, amp)
 
 
-def _apply_host(xq, bank: PrecodedBank, *, datapath, shift, amp):
-    """Host datapath: per-tap shift-and-accumulate, O(C*N) live memory.
+def _apply_host(xq, bank: PrecodedBank, *, datapath, shift, amp, form=None):
+    """Host datapath: exact contraction or per-tap accumulate, by form.
 
-    Tap k contributes ``mul(x[n-k], h[k])``; the hot paths walk the taps
-    and accumulate, so no (C, N, taps) window array materializes:
+    Tap k contributes ``mul(x[n-k], h[k])``:
 
-      * exact specs run the per-tap loop in int64 numpy (any wl; the
+      * exact specs run a per-tap loop in int64 numpy (any wl; the
         float64 accumulator is exact while partial sums stay below 2^53),
       * Booth-family approximate specs inside the int32 envelope run a
-        single fused device dispatch (``_fir_accum_device``).
+        single fused device dispatch — the dot form (dense exact
+        contraction + scaled truncated rows, from the bank's cached digit
+        planes) by default; ``form="rows"`` pins the per-tap loop
+        (``_fir_accum_device``).
 
     Everything else (wlbit's saturating per-product rounding, non-Booth
     multipliers, sub-envelope shifts) falls back to the windowed
@@ -396,6 +415,34 @@ def _apply_host(xq, bank: PrecodedBank, *, datapath, shift, amp):
         raise ValueError("datapath='wlbit' models its own product rounding; "
                          "use shift=0")
     lim = float(1 << (wl - 1))
+
+    # Booth-family hot path on the full-precision datapath: a single fused
+    # device dispatch on the bank's cached digit planes, inside the int32
+    # envelope.  The dot form (dense exact contraction + scaled truncated
+    # rows) is the default — this includes the *exact* "booth" spec
+    # (vbl = 0, a pure dot); form="rows" pins the per-tap emulation.
+    booth_hot = (datapath == "full" and spec.name in BBM_KINDS
+                 and wl <= 16 and min_safe_shift(taps, wl) <= shift)
+    if booth_hot:
+        vbl = 0 if spec.name == "booth" else spec.param
+        use_dot = resolve_form(form) == "dot"
+        if use_dot and form is None and jax.default_backend() != "cpu" \
+                and xq.size * taps > _DOT_WINDOW_BUDGET:
+            # mirror the kernel's auto-form memory gate instead of
+            # escalating None to an explicit "dot" (which would bypass
+            # it); the fallback here is the host-native per-tap path
+            use_dot = False
+        if use_dot:
+            xc = jnp.asarray(_codes32(xq, wl))
+            hmag, hneg = bank.planes     # decoded once per bank, cached
+            acc = np.asarray(fir_bbm_bank_precoded(
+                xc, hmag, hneg, wl=wl, vbl=vbl, kind=BBM_KINDS[spec.name],
+                shift=shift, form="dot"), np.float64)
+            return _descale(acc, wl, shift, amp)
+    elif form == "dot":
+        raise ValueError("form='dot' needs a Booth-family spec on the "
+                         "full-precision datapath inside the int32 "
+                         "envelope")
 
     if spec.is_exact:
         # exact quantized path in int64 numpy: valid for any wl (the jax
@@ -418,8 +465,7 @@ def _apply_host(xq, bank: PrecodedBank, *, datapath, shift, amp):
                          "(int32-exact); the paper's operating point is 16")
     xc = jnp.asarray(_codes32(xq, wl))
     hc = jnp.asarray(_codes32(hq, wl))
-    if datapath == "full" and spec.name in BBM_KINDS \
-            and min_safe_shift(taps, wl) <= shift:
+    if booth_hot:
         acc = np.asarray(_fir_accum_device(xc, hc, spec.name, wl, spec.param,
                                            spec.hbl, shift, taps), np.float64)
         return _descale(acc, wl, shift, amp)

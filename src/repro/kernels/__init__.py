@@ -1,12 +1,16 @@
 """Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
-from .booth_rows import booth_precode
+from .booth_rows import (bbm_rows_product_dotform, booth_correction,
+                         booth_high_value, booth_precode, booth_value,
+                         dotform_scaled_bound, resolve_form)
 from .fir_kernel import (fir_bbm, fir_bbm_bank, fir_bbm_bank_precoded,
                          min_safe_shift)
 from .ops import (bbm_matmul, bbm_matmul_precoded, fir_filterbank,
                   fir_filterbank_precoded, flash_attention, on_tpu,
                   quant_matmul)
 
-__all__ = ["bbm_matmul", "bbm_matmul_precoded", "booth_precode", "fir_bbm",
-           "fir_bbm_bank", "fir_bbm_bank_precoded", "fir_filterbank",
+__all__ = ["bbm_matmul", "bbm_matmul_precoded", "bbm_rows_product_dotform",
+           "booth_correction", "booth_high_value", "booth_precode",
+           "booth_value", "dotform_scaled_bound", "fir_bbm", "fir_bbm_bank",
+           "fir_bbm_bank_precoded", "fir_filterbank",
            "fir_filterbank_precoded", "flash_attention", "min_safe_shift",
-           "on_tpu", "quant_matmul"]
+           "on_tpu", "quant_matmul", "resolve_form"]

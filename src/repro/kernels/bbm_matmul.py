@@ -6,11 +6,23 @@ the closed-form Broken-Booth product (Type0/Type1) and ``shift`` an optional
 arithmetic right shift applied per product (the fixed-point MAC rescale).
 
 TPU adaptation notes (this is the paper's multiplier *as a TPU kernel*):
-  * The MXU performs exact multiplies only, so a broken multiplier cannot use
-    it — the kernel is pure VPU integer work.  The value of running it on TPU
-    is bit-exact emulation of the proposed silicon at memory-bandwidth speed,
-    for datapath validation and for calibrating the statistical noise model
-    that the MXU fast path (quant_matmul) uses.
+  * The MXU performs exact multiplies only — but that does NOT keep a broken
+    multiplier off it: clearing the low ``m`` bits of a two's-complement row
+    is subtraction of its low bits, so every BBM product is the *exact*
+    product minus a correction built from the low ``vbl`` bits of ``x``
+    (``booth_rows.booth_correction``), and folding the correction's own
+    linear term back into the contraction gives
+    ``bbm(x, w) == 2^vbl * (x*wq + truncated-row terms)``.  ``form="dot"``
+    computes exactly that: the dominant ``x @ wq`` contraction rides the
+    hardware's native matmul units (MXU on TPU, XLA's matmul lowering on
+    CPU) and only the ``ceil(vbl/2)`` truncated digit planes are walked
+    elementwise.  ``form="rows"`` keeps the pure-VPU row emulation — still
+    the bit-exact reference datapath for validating the silicon and
+    calibrating the statistical noise model that the quantized fast path
+    (quant_matmul) uses.  ``form=None`` auto-picks the dot form; its
+    scaled accumulation stays inside the rows-form int32 envelope for
+    every vbl (``booth_rows.dotform_scaled_bound`` has the re-derived
+    analysis).
   * ``w`` is the Booth *multiplier* operand and is constant across the whole
     grid (every (i, j) tile re-reads the same weight blocks), so its radix-4
     digits are decoded exactly once per call by ``booth_rows.booth_precode``
@@ -39,10 +51,52 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.booth import num_pp_rows
-from .booth_rows import (bbm_rows_product_precoded, booth_precode,
+from .booth_rows import (bbm_rows_product_precoded, booth_high_value,
+                         booth_precode, resolve_form, scaled_trunc_rows,
                          split_signed)
 
 __all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_precoded"]
+
+# auto-form only: above this many int32 elements the dot form's (M, K, N)
+# truncated-row correction temporary stops being a fair trade against the
+# tiled rows kernel, so form=None falls back to streaming.  An explicit
+# form="dot" is honored regardless — the caller owns the memory then.
+_DOT_CORR_BUDGET = 1 << 26
+
+
+def _matmul_dotform(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
+                    shift: int):
+    """Dot-form matmul: one dense contraction + scaled truncated rows.
+
+    Bit-identical to the rows kernel.  Every BBM product is ``2^vbl * M``
+    with ``M = x*wq + sum_{r<R} ((d_r*x - neg_r*kind) >> m_r)`` (see
+    ``booth_rows.dotform_scaled_bound``): the dominant term is a plain
+    ``x @ wq`` integer matmul — the MXU on TPU, XLA's matmul lowering on
+    CPU — and only the ``R = ceil(vbl/2)`` truncated digit planes walk an
+    (M, K, N) elementwise correction (the im2col trade).  Accumulating at
+    the ``2^-max(vbl, shift)`` scale keeps every partial sum inside the
+    rows-form int32 envelope.
+    """
+    _, x_s = split_signed(x, wl)
+    wq = booth_high_value(wmag, wneg, wl=wl, vbl=vbl)        # (K, N)
+    u = max(shift - vbl, 0)       # per-product residual rescale (rare)
+    q = scaled_trunc_rows(x_s[:, :, None], wmag[:, None, :, :],
+                          wneg[:, None, :, :], wl=wl, vbl=vbl,
+                          kind=kind)                         # (M, K, N)
+    if u == 0:
+        acc = jax.lax.dot(x_s, wq, preferred_element_type=jnp.int32)
+        if q is not None:
+            acc = acc + jnp.sum(q, axis=1, dtype=jnp.int32)
+    else:
+        # shift > vbl: the residual floor applies per product, before
+        # the K reduction
+        m_prod = x_s[:, :, None] * wq[None]
+        if q is not None:
+            m_prod = m_prod + q
+        acc = jnp.sum(m_prod >> u, axis=1, dtype=jnp.int32)
+    if vbl > shift:
+        acc = acc << (vbl - shift)
+    return acc
 
 
 def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,
@@ -67,14 +121,20 @@ def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,
 
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
-                                             "bm", "bk", "bn", "interpret"))
+                                             "bm", "bk", "bn", "interpret",
+                                             "form"))
 def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
                         shift: int = 0, bm: int = 64, bk: int = 64,
-                        bn: int = 64, interpret: bool = False):
+                        bn: int = 64, interpret: bool = False,
+                        form: str | None = None):
     """Tiled approximate matmul on precoded weight-digit planes.
 
     x: (M, K) int32 codes; wmag, wneg: (wl//2, K, N) planes from
     ``booth_precode`` of the (K, N) weight code matrix.
+    form: "rows" (VPU row emulation), "dot" (dense contraction + scaled
+    truncated rows, on the matmul units) or None (auto: the dot form).
+    Bit-identical; ``bm``/``bk``/``bn``/``interpret`` only shape the rows
+    form.
     """
     mm, kk = x.shape
     n_rows, kk2, nn = wmag.shape
@@ -84,6 +144,14 @@ def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
     if n_rows != num_pp_rows(wl) or kk != kk2:
         raise ValueError(f"digit planes {wmag.shape} do not match "
                          f"wl={wl}, K={kk}")
+    if form is None and (vbl or shift) and mm * kk * nn > _DOT_CORR_BUDGET:
+        # both the truncated-row correction (vbl > 0) and the per-product
+        # residual floor (shift > vbl, incl. vbl = 0) materialize an
+        # (M, K, N) temporary; only the pure dot (vbl = shift = 0) is free
+        form = "rows"
+    if resolve_form(form) == "dot":
+        return _matmul_dotform(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
+                               shift=shift)
     grid = (pl.cdiv(mm, bm), pl.cdiv(nn, bn), pl.cdiv(kk, bk))
     kernel = functools.partial(bbm_matmul_kernel, wl=wl, vbl=vbl, kind=kind,
                                shift=shift, n_k=grid[2])
@@ -105,10 +173,11 @@ def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "shift",
-                                             "bm", "bk", "bn", "interpret"))
+                                             "bm", "bk", "bn", "interpret",
+                                             "form"))
 def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
                bm: int = 64, bk: int = 64, bn: int = 64,
-               interpret: bool = False):
+               interpret: bool = False, form: str | None = None):
     """Tiled bit-exact approximate matmul.  x: (M, K) w: (K, N), int32 codes.
 
     Thin raw-code wrapper: precodes ``w`` once (hoisting the recode out of
@@ -118,4 +187,4 @@ def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
     wmag, wneg = booth_precode(w, wl)
     return bbm_matmul_precoded(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
                                shift=shift, bm=bm, bk=bk, bn=bn,
-                               interpret=interpret)
+                               interpret=interpret, form=form)

@@ -36,6 +36,33 @@ resolved at trace time: the row loop is unrolled over the ``wl/2`` radix-4
 rows and the per-row mask widths are Python ints, so both phases are safe
 to call from inside a Pallas kernel body as well as from plain jitted code.
 Bit-exact to the closed forms in ``core.bbm`` (``bbm_type0`` / ``bbm_type1``).
+
+Dot form (the exact-product decomposition): clearing the low ``m`` bits of
+a two's-complement value is subtraction of its low bits,
+``(p >> m) << m  ==  p - (p & (2^m - 1))``, so every truncated Booth row is
+``d_r*A - ((d_r*A) mod 2^m_r)`` and the whole Broken-Booth product
+collapses to
+
+    bbm(a, b)  ==  a_s * b_s  -  correction(a mod 2^vbl, digit planes)
+
+where the dominant ``a_s * b_s`` term is an *exact* multiply — so a sum of
+BBM products (FIR tap loop, matmul K axis) is one dense integer
+contraction on the hardware's native matmul units plus a narrow correction
+built entirely from masks on the low ``vbl`` bits of ``a``
+(``booth_correction``; only the ``ceil(vbl/2)`` rows with a nonzero break
+column participate).  ``bbm_rows_product_dotform`` is the per-element form
+of that identity — the third bit-exact accumulate form.
+
+The kernels use the *folded* equivalent: the correction's own linear term
+``dot(a mod 2^vbl, h)`` is itself a dense contraction, and folding it back
+in shows every BBM product is divisible by ``2^vbl`` —
+
+    bbm(a, b) == 2^vbl * [ a*bq + sum_{r<R} ((d_r*a - neg_r*kind) >> m_r) ]
+
+with ``bq = booth_high_value`` the truncation-surviving digit value.
+Accumulating the bracketed scale keeps the dot form inside the rows-form
+int32 envelope for every vbl (``dotform_scaled_bound`` carries the
+re-derived analysis).
 """
 from __future__ import annotations
 
@@ -44,8 +71,11 @@ import jax.numpy as jnp
 
 from ..core.booth import num_pp_rows
 
-__all__ = ["bbm_rows_product", "bbm_rows_product_precoded", "booth_precode",
-           "split_signed"]
+__all__ = ["bbm_rows_product", "bbm_rows_product_precoded",
+           "bbm_rows_product_dotform", "booth_correction",
+           "booth_high_value", "booth_precode", "booth_value",
+           "dotform_scaled_bound", "num_corr_rows", "resolve_form",
+           "scaled_trunc_rows", "signed_digit", "split_signed"]
 
 
 def split_signed(x, wl: int):
@@ -104,7 +134,9 @@ def bbm_rows_product_precoded(a_s, mag, neg, *, wl: int, vbl: int, kind: int,
     """
     if multiply_free is None:
         multiply_free = jax.default_backend() == "tpu"
-    a2 = a_s << 1                         # the shared "2A" generate
+    # the shared "2A" generate feeds only the select form; the multiply
+    # form folds the digit into the (small) plane and never reads it
+    a2 = a_s << 1 if multiply_free else None
     prod = None
     for r in range(num_pp_rows(wl)):
         m_r = mag[r]
@@ -117,7 +149,7 @@ def bbm_rows_product_precoded(a_s, mag, neg, *, wl: int, vbl: int, kind: int,
             else:
                 # fold the sign into the (small) digit plane: one full-size
                 # multiply per row, no full-size select at all
-                rows = jnp.where(s_r == 1, -m_r, m_r) * a_s
+                rows = signed_digit(m_r, s_r) * a_s
             contrib = (rows >> m) << m    # floor for two's complement
         else:
             if multiply_free:
@@ -131,6 +163,180 @@ def bbm_rows_product_precoded(a_s, mag, neg, *, wl: int, vbl: int, kind: int,
         term = contrib << (2 * r)
         prod = term if prod is None else prod + term
     return prod
+
+
+def signed_digit(mag_r, neg_r):
+    """Signed Booth digit of one row plane: ``d = -mag`` when ``neg``.
+
+    The single place the (mag, neg) encoding is turned back into a signed
+    digit — every form (value reconstruction, correction, dot kernels)
+    goes through here, so an encoding change has one site to touch.
+    """
+    return jnp.where(neg_r == 1, -mag_r, mag_r)
+
+
+def num_corr_rows(wl: int, vbl: int) -> int:
+    """Rows whose break column is nonzero: only they feed the correction.
+
+    Row r nullifies ``m_r = max(0, vbl - 2r)`` bits, so rows with
+    ``2r >= vbl`` contribute nothing; ``vbl = 0`` means no correction at
+    all (the exact Booth product).
+    """
+    return min(num_pp_rows(wl), (vbl + 1) // 2)
+
+
+def booth_value(mag, neg, *, wl: int):
+    """Signed multiplier value reconstructed from its digit planes.
+
+    ``sum_r d_r * 4^r == to_signed(b, wl)`` — the radix-4 recode is exact —
+    so precoded callers never need the raw codes to form the dense
+    contraction operand of the dot form.  Bank-sized work (tiny next to
+    the signal), safe inside jit.
+    """
+    val = None
+    for r in range(num_pp_rows(wl)):
+        term = signed_digit(mag[r], neg[r]) << (2 * r)
+        val = term if val is None else val + term
+    return val
+
+
+def booth_correction(a_s, mag, neg, *, wl: int, vbl: int, kind: int):
+    """Low-bit correction ``c >= 0`` with ``bbm(a, b) == a_s*b_s - c``.
+
+    Derivation: ``(p >> m) << m == p - (p & (2^m - 1))`` for two's
+    complement, so per row
+
+      Type0:  trunc_r = d_r*A - ((d_r*A) & mask_r)
+      Type1:  row_r   = d_r*A - neg_r          (one's complement + S dot)
+              trunc_r + sdot_r = d_r*A - [((d_r*A - neg_r) & mask_r)
+                                          + neg_r]   for m_r > 0
+
+    and ``sum_r d_r*A*4^r`` is the exact product.  Every masked term
+    depends only on the low ``m_r <= vbl`` bits of ``A``, so the whole
+    correction runs on ``a_s & (2^vbl - 1)`` — narrow masks and adds, no
+    wide arithmetic.  ``vbl = 0`` returns the all-zero correction.
+
+    ``mag[r]`` / ``neg[r]`` must broadcast against ``a_s`` exactly as in
+    ``bbm_rows_product_precoded``; the result has the broadcast shape.
+    """
+    a_low = a_s & ((1 << vbl) - 1)        # nonneg, < 2^vbl: narrow products
+    corr = None
+    for r in range(num_corr_rows(wl, vbl)):
+        m = vbl - 2 * r                   # > 0 for every correction row
+        mask = (1 << m) - 1
+        rows = signed_digit(mag[r], neg[r]) * a_low
+        if kind == 0:
+            term = rows & mask
+        else:
+            # the 111 "negative zero" triplet (mag 0, neg 1) lands here
+            # too: ((0 - 1) & mask) + 1 == 2^m, the dropped all-ones row
+            term = ((rows - neg[r]) & mask) + neg[r]
+        t = term << (2 * r)
+        corr = t if corr is None else corr + t
+    if corr is None:
+        shape = jnp.broadcast_shapes(jnp.shape(a_s), jnp.shape(mag[0]))
+        corr = jnp.zeros(shape, jnp.int32)
+    return corr
+
+
+def bbm_rows_product_dotform(a_s, mag, neg, *, wl: int, vbl: int, kind: int):
+    """Third bit-exact accumulate form: exact product minus correction.
+
+    ``a_s * booth_value(planes) - booth_correction(...)`` — the
+    per-element statement of the dot-form identity.  Same contract as
+    ``bbm_rows_product_precoded`` (bit-identical to ``core.bbm.bbm_mul``);
+    the payoff comes when the exact term is *summed* before the correction
+    (FIR tap loop, matmul K axis): the sum is then one dense contraction
+    on the matmul units (see the kernel dot forms and
+    ``dotform_scaled_bound``).
+    """
+    b_s = booth_value(mag, neg, wl=wl)
+    return a_s * b_s - booth_correction(a_s, mag, neg, wl=wl, vbl=vbl,
+                                        kind=kind)
+
+
+def booth_high_value(mag, neg, *, wl: int, vbl: int):
+    """Truncation-surviving digit value, pre-divided by ``2^vbl``.
+
+    The rows with a nonzero break column (r < R) lose their low bits to
+    the VBL nullification; the rows above survive intact and their summed
+    weight ``sum_{r >= R} d_r * 4^r`` is divisible by ``2^vbl`` (because
+    ``2R >= vbl``).  Returns ``bq = sum_{r >= R} d_r << (2r - vbl)`` — the
+    integer the dot form contracts the *full* signal against.  ``vbl = 0``
+    reduces to ``booth_value`` (the exact multiplier).
+    """
+    r0 = num_corr_rows(wl, vbl)
+    bq = None
+    for r in range(r0, num_pp_rows(wl)):
+        term = signed_digit(mag[r], neg[r]) << (2 * r - vbl)
+        bq = term if bq is None else bq + term
+    if bq is None:
+        bq = jnp.zeros(jnp.shape(mag[0]), jnp.int32)
+    return bq
+
+
+def scaled_trunc_rows(a_s, mag, neg, *, wl: int, vbl: int, kind: int):
+    """``Q = sum_{r<R} ((d_r*a - neg_r*kind) >> m_r)`` — the folded dot
+    form's truncated-row term, at the ``2^-vbl`` product scale.
+
+    The one implementation of the per-row truncation semantics (including
+    Type1's ``- neg_r`` and the negative-zero 111 triplet) shared by every
+    dot-form kernel; ``mag[r]`` / ``neg[r]`` broadcast against ``a_s``.
+    Returns ``None`` when no row is truncated (``vbl = 0``).
+    """
+    q = None
+    for r in range(num_corr_rows(wl, vbl)):
+        rowp = signed_digit(mag[r], neg[r]) * a_s
+        if kind == 1:
+            rowp = rowp - neg[r]
+        qr = rowp >> (vbl - 2 * r)
+        q = qr if q is None else q + qr
+    return q
+
+
+def dotform_scaled_bound(k: int, wl: int, vbl: int, shift: int) -> int:
+    """Worst-case |accumulator| of the dot form — the re-derived envelope.
+
+    The naive reading of "accumulate exact products, then subtract the
+    correction" overflows int32 long before the rows form does (the raw
+    ``sum_k a*b`` is ``2^vbl`` larger than the truncated sum).  The fix is
+    algebraic, not a wider accumulator: every truncated row term is
+    divisible by ``2^vbl`` (row r < R contributes
+    ``((d_r*a - neg_r*kind) >> m_r) * 2^(m_r + 2r)`` with
+    ``m_r + 2r == vbl``; row r >= R contributes ``d_r*a*4^r`` with
+    ``2r >= vbl``), so the *whole BBM product* is ``2^vbl * M`` and the
+    dot form accumulates the scaled ``M = a*bq + sum_r q_r`` directly:
+
+        y = (dot(a, bq) + sum_k sum_{r<R} q_{r,k}) << (vbl - shift)
+
+    (per-product ``>> (shift - vbl)`` inside the sum when shift > vbl).
+    Accumulating at scale ``2^-max(vbl, shift)`` bounds the partial sums
+    by ``k * 2^(2wl - 1 - max(vbl, shift))`` — never looser than the rows
+    envelope ``k * 2^(2wl - 1 - shift)``, so the dot form is int32-safe
+    whenever the rows form is, for every vbl.  Returns that bound.
+    """
+    return k * 2 ** max(2 * wl - 1 - max(vbl, shift), 0)
+
+
+def resolve_form(form: str | None) -> str:
+    """Trace-time accumulate-form selection: "rows" | "dot" | None (auto).
+
+    ``None`` picks the dot form: its re-derived envelope
+    (``dotform_scaled_bound``) is never looser than the rows envelope, so
+    no operating point needs a *numerical* fallback, and it is the faster
+    form wherever the backend has real matmul/vector throughput.  (The
+    kernel entry points still route oversized auto-form calls to "rows"
+    for *memory* reasons — their windowed / correction temporaries trade
+    against the rows form's streaming; see ``_DOT_WINDOW_BUDGET`` /
+    ``_DOT_CORR_BUDGET`` at the call sites.)  ``"rows"`` keeps the
+    streaming Pallas emulation.
+    """
+    if form in (None, "dot"):
+        return "dot"
+    if form == "rows":
+        return "rows"
+    raise ValueError(f"unknown accumulate form {form!r} "
+                     f"(expected 'rows', 'dot' or None)")
 
 
 def bbm_rows_product(a_s, bu, *, wl: int, vbl: int, kind: int):

@@ -25,7 +25,12 @@ def on_tpu() -> bool:
 
 
 def _matmul_envelope(k: int, wl: int, shift: int) -> None:
-    # int32 overflow envelope: K * max|product >> shift| < 2^31
+    # int32 overflow envelope for the *result*: K * max|product >> shift|
+    # < 2^31.  This bounds the truncated-and-shifted sum, which is what
+    # every form returns.  The dot form accumulates BBM products at their
+    # natural 2^-max(vbl, shift) scale (every product is divisible by
+    # 2^vbl), so its re-derived envelope — booth_rows.dotform_scaled_bound
+    # — is never looser than this one: one check gates both forms.
     if k * (2 ** max(2 * wl - 1 - shift, 0)) >= 2 ** 31:
         raise ValueError(
             f"accumulation may overflow int32: K={k}, wl={wl}, shift={shift};"
@@ -33,57 +38,67 @@ def _matmul_envelope(k: int, wl: int, shift: int) -> None:
 
 
 def bbm_matmul(x, w, *, wl: int, vbl: int, kind: int = 0, shift: int = 0,
-               interpret=None, **block_kw):
-    """Bit-exact Broken-Booth matmul (int32 codes in/out)."""
+               interpret=None, form=None, **block_kw):
+    """Bit-exact Broken-Booth matmul (int32 codes in/out).
+
+    form: "rows" | "dot" | None (auto) — see ``bbm_matmul_precoded``.
+    """
     _matmul_envelope(x.shape[-1], wl, shift)
     if interpret is None:
         interpret = not on_tpu()
     return _bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                       interpret=interpret, **block_kw)
+                       interpret=interpret, form=form, **block_kw)
 
 
 def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
-                        shift: int = 0, interpret=None, **block_kw):
+                        shift: int = 0, interpret=None, form=None,
+                        **block_kw):
     """Broken-Booth matmul on precoded weight-digit planes.
 
     wmag, wneg: (wl//2, K, N) planes from ``kernels.booth_precode`` —
     decode the constant weight operand once, reuse across calls.
+    form: "rows" keeps the VPU row emulation, "dot" puts the dominant
+    contraction on the matmul units (None auto-picks "dot").
     """
     _matmul_envelope(x.shape[-1], wl, shift)
     if interpret is None:
         interpret = not on_tpu()
     return _bbm_matmul_precoded(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
-                                shift=shift, interpret=interpret, **block_kw)
+                                shift=shift, interpret=interpret, form=form,
+                                **block_kw)
 
 
 def fir_filterbank(x, h, *, wl: int, vbl: int, kind: int = 0,
-                   shift: int = 0, interpret=None, **block_kw):
+                   shift: int = 0, interpret=None, form=None, **block_kw):
     """Batched multi-channel Broken-Booth FIR (int32 codes in/out).
 
     x: (C, N) signal codes, h: (C, taps) per-channel tap banks (or (taps,)
     shared).  The int32 envelope taps * 2^(2*wl-1-shift) < 2^31 is checked
-    inside the kernel wrapper.
+    inside the kernel wrapper and covers both accumulate forms (the dot
+    form's scaled accumulation is never looser —
+    ``booth_rows.dotform_scaled_bound``).
     """
     if interpret is None:
         interpret = not on_tpu()
     return _fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                         interpret=interpret, **block_kw)
+                         interpret=interpret, form=form, **block_kw)
 
 
 def fir_filterbank_precoded(x, hmag, hneg, *, wl: int, vbl: int,
                             kind: int = 0, shift: int = 0, interpret=None,
-                            **block_kw):
+                            form=None, **block_kw):
     """Filterbank on precoded tap-digit planes (int32 codes in/out).
 
     x: (C, N) signal codes; hmag, hneg: (wl//2, C, taps) digit planes from
     ``kernels.booth_precode`` of the tap bank — decode once per bank, reuse
     across every flush that shares it.
+    form: "rows" | "dot" | None (auto) — see ``fir_bbm_bank_precoded``.
     """
     if interpret is None:
         interpret = not on_tpu()
     return _fir_bbm_bank_precoded(x, hmag, hneg, wl=wl, vbl=vbl, kind=kind,
                                   shift=shift, interpret=interpret,
-                                  **block_kw)
+                                  form=form, **block_kw)
 
 
 def quant_matmul(x, w, s_x, s_w, mu=0.0, sigma=0.0, *, wl: int = 16,

@@ -10,9 +10,14 @@ at all (the sharding *is* the decomposition).
 The tap bank is the Booth multiplier operand and is constant across the
 batch, so its radix-4 digits are decoded exactly once — *outside* the
 shard_map — and the (wl//2, C, taps) digit planes are what gets sharded
-along the channel axis; each shard's kernel runs the multiply-free
-accumulate phase only.  Long-lived callers can decode once per bank
-lifetime with ``precode_filterbank`` and pass the planes to every call.
+along the channel axis; each shard runs the accumulate phase only.
+Long-lived callers can decode once per bank lifetime with
+``precode_filterbank`` and pass the planes to every call.
+
+Accumulate-form selection is per shard and trace-time: the dot form
+(dense exact contraction on the matmul units + scaled truncated rows —
+``kernels.booth_rows``) is the default on every backend; ``form="rows"``
+pins the streaming kernel emulation instead.
 
 Everything is integer-code level: (C, N) int32 wl-bit signal codes in,
 (C, N) int32 accumulator values out, bit-identical to the unsharded kernel
@@ -26,8 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..kernels.booth_rows import booth_precode
-from ..kernels.fir_kernel import _check_envelope, fir_bbm_bank_precoded
+from ..kernels.booth_rows import booth_precode, resolve_form
+from ..kernels.fir_kernel import (_DOT_WINDOW_BUDGET, _check_envelope,
+                                  fir_bbm_bank_precoded)
 from ..kernels.ops import on_tpu
 from ..kernels.ref import fir_bank_ref
 
@@ -53,17 +59,21 @@ def precode_filterbank(h, *, wl: int, channels: int | None = None):
 def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
                        shift: int = 0, axis: str = "data",
                        use_kernel: bool | None = None, bc: int = 8,
-                       bt: int = 512, h_planes=None):
+                       bt: int = 512, h_planes=None,
+                       form: str | None = None):
     """Filterbank over ``mesh`` with channels sharded on mesh axis ``axis``.
 
     x: (C, N) int32 codes, h: (C, taps) int32 codes (or (taps,) shared).
     C must divide by the mesh axis size; pad channels first if it does not.
-    ``use_kernel=None`` picks the Pallas kernel on TPU and the jnp closed
-    form on host backends (where the interpreter inside shard_map would
-    only slow things down).  ``h_planes`` takes the digit planes from
-    ``precode_filterbank`` so a long-lived bank is decoded once, not once
-    per call; when omitted the decode still runs only once per call,
-    outside the shard_map.
+    ``use_kernel=None`` picks the kernel datapath everywhere: on TPU
+    always, and off-TPU because the auto form is the dot form — plain
+    XLA, not the interpreter.  Only ``form="rows"`` off-TPU falls back to
+    the jnp closed form (the interpreter inside shard_map would only slow
+    things down); ``use_kernel=False`` forces that path.  ``form`` pins
+    the accumulate form ("rows"/"dot"; None auto).  ``h_planes`` takes
+    the digit planes from ``precode_filterbank`` so a long-lived bank is
+    decoded once, not once per call; when omitted the decode still runs
+    only once per call, outside the shard_map.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -76,8 +86,19 @@ def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
     if x.shape[0] % n_shards:
         raise ValueError(f"channels={x.shape[0]} not divisible by "
                          f"mesh axis {axis!r} of size {n_shards}")
+    resolve_form(form)        # validate on every path, incl. the jnp one
     if use_kernel is None:
-        use_kernel = on_tpu()
+        # auto: the kernel datapath, unless a form=None off-TPU shard
+        # would hit the kernel's own auto-form memory fallback to
+        # *interpreted* rows — there the jnp closed form below is the
+        # sane default instead.  An explicit form="dot" is always
+        # honored (the caller owns the memory then).
+        per_shard = (x.shape[0] // n_shards) * x.shape[1] * h.shape[1]
+        dot_auto = resolve_form(form) == "dot" and (
+            form == "dot"
+            or jax.default_backend() == "cpu"
+            or per_shard <= _DOT_WINDOW_BUDGET)
+        use_kernel = on_tpu() or dot_auto
 
     if use_kernel:
         if h_planes is None:
@@ -88,7 +109,7 @@ def sharded_filterbank(x, h, mesh: Mesh, *, wl: int, vbl: int, kind: int = 0,
                              f"x has {x.shape[0]}")
         apply_fn = functools.partial(fir_bbm_bank_precoded, wl=wl, vbl=vbl,
                                      kind=kind, shift=shift, bc=bc, bt=bt,
-                                     interpret=not on_tpu())
+                                     interpret=not on_tpu(), form=form)
         fn = shard_map(
             lambda xs, hm, hn: apply_fn(xs, hm, hn),
             mesh=mesh,

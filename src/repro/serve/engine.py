@@ -127,29 +127,43 @@ class FilterbankEngine:
     the bank that should filter it.  Construction also quantizes and
     Booth-precodes the banks exactly once (``dsp.PrecodedBank``) — the
     decode phase of the Broken-Booth datapath never runs again for the
-    engine's lifetime.  ``flush`` pads the pending signals to a common
-    length, stacks them into a (C, N) batch, gathers the per-request banks
-    out of the precoded cache (an index, not a re-quantize/re-recode), runs
-    the whole batch through ``dsp.fir_apply`` (host or Pallas backend) in a
-    single call, and returns each request's output trimmed back to its own
-    length.
+    engine's lifetime, and the cached digit planes double as the dot
+    form's correction planes, so every flush picks the exact-dot +
+    correction lowering automatically (``form=None``; pass ``form="rows"``
+    to pin the row emulation).  ``flush`` pads the pending signals to a
+    common length, stacks them into a (C, N) batch, gathers the
+    per-request banks out of the precoded cache (an index, not a
+    re-quantize/re-recode), runs the whole batch through ``dsp.fir_apply``
+    (host or Pallas backend) in a single call, and returns each request's
+    output trimmed back to its own length.
     """
 
     def __init__(self, h_banks: np.ndarray, spec, *, backend: str = "host",
-                 max_channels: int = 64, block: int = 512):
-        from ..dsp.fir import PrecodedBank, fir_apply
+                 max_channels: int = 64, block: int = 512,
+                 form: Optional[str] = None):
+        from ..dsp.fir import BBM_KINDS, PrecodedBank, fir_apply
+        from ..kernels.booth_rows import resolve_form
         h_banks = np.atleast_2d(np.asarray(h_banks, np.float64))
         self.h_banks = h_banks
         self.spec = spec
         self.backend = backend
         self.max_channels = max_channels
         self.block = block
+        resolve_form(form)    # fail fast: flush() dispatches before it
+        if form == "dot" and (spec.name not in BBM_KINDS or spec.wl > 16):
+            # reject at construction what every flush would reject — the
+            # dispatch-before-dequeue contract would otherwise wedge the
+            # queue permanently
+            raise ValueError(f"form='dot' needs a Booth-family spec at "
+                             f"wl <= 16, not {spec}")
+        self.form = form          # "rows" | "dot" | None (auto: dot)
         self._apply = fir_apply
         # decode phase hoisted out of the serving hot loop: built once here,
-        # reused (gathered by request index) across every flush.  The host
-        # backend consumes only the quantized codes, so don't decode (or
-        # later gather) digit planes it would never read.
-        self.bank = PrecodedBank(h_banks, spec, precode=backend != "host")
+        # reused (gathered by request index) across every flush.  Both
+        # backends read the digit planes now — they double as the dot
+        # form's correction planes — so always decode eagerly; the bank
+        # itself skips the decode for specs no kernel form implements.
+        self.bank = PrecodedBank(h_banks, spec)
         self._pending: List[FilterRequest] = []
         self._next_rid = 0
 
@@ -175,7 +189,7 @@ class FilterbankEngine:
             # dispatch before dequeue: a raising backend leaves the batch
             # queued so a later flush can still serve it
             y = self._apply(x, h, self.spec, backend=self.backend,
-                            block=self.block)
+                            block=self.block, form=self.form)
             self._pending = self._pending[self.max_channels:]
             for c, r in enumerate(batch):
                 results[r.rid] = y[c, : len(r.signal)]

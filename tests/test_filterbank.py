@@ -38,7 +38,7 @@ def test_fir_bank_kernel_matches_closed_form(wl, vbl, kind):
     shift = min_safe_shift(taps, wl)
     x, h = _bank_case(channels, n, taps, wl)
     got = fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                       bc=2, bt=128, interpret=True)
+                       bc=2, bt=128, interpret=True, form="rows")
     ref = fir_bank_ref(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
@@ -48,10 +48,12 @@ def test_fir_bank_halo_streams_across_many_blocks():
     wl, vbl, kind, taps = 12, 9, 1, 31
     x, h = _bank_case(3, 1024, taps, wl)
     ref = np.asarray(fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind,
-                                  bc=3, bt=1024, interpret=True))
+                                  bc=3, bt=1024, interpret=True,
+                                  form="rows"))
     for bt in (64, 128, 256):
         got = np.asarray(fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind,
-                                      bc=2, bt=bt, interpret=True))
+                                      bc=2, bt=bt, interpret=True,
+                                      form="rows"))
         np.testing.assert_array_equal(got, ref, err_msg=f"bt={bt}")
 
 
@@ -59,7 +61,8 @@ def test_fir_bank_shared_taps_broadcast():
     wl, taps = 10, 31
     x, _ = _bank_case(4, 300, taps, wl)
     h1 = jnp.asarray(RNG.integers(0, 1 << wl, taps), jnp.int32)
-    got = fir_bbm_bank(x, h1, wl=wl, vbl=5, interpret=True)
+    got = fir_bbm_bank(x, h1, wl=wl, vbl=5, interpret=True,
+                       form="rows")
     ref = fir_bank_ref(x, jnp.broadcast_to(h1, (4, taps)), wl=wl, vbl=5)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
@@ -68,7 +71,8 @@ def test_fir_bbm_1d_wrapper_matches_bank():
     wl, vbl, kind = 12, 7, 0
     x = jnp.asarray(RNG.integers(0, 1 << wl, 500), jnp.int32)
     h = jnp.asarray(RNG.integers(0, 1 << wl, 31), jnp.int32)
-    got = fir_bbm(x, h, wl=wl, vbl=vbl, kind=kind, block=128, interpret=True)
+    got = fir_bbm(x, h, wl=wl, vbl=vbl, kind=kind, block=128,
+                  interpret=True, form="rows")
     ref = fir_bank_ref(x[None], h[None], wl=wl, vbl=vbl, kind=kind)[0]
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
@@ -114,7 +118,8 @@ def test_bbm_matmul_matches_bbm_mul(wl, vbl, kind):
     x = jnp.asarray(RNG.integers(0, 1 << wl, (m, k)), jnp.int32)
     w = jnp.asarray(RNG.integers(0, 1 << wl, (k, n)), jnp.int32)
     got = np.asarray(bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                                bm=8, bk=16, bn=8, interpret=True), np.int64)
+                                bm=8, bk=16, bn=8, interpret=True,
+                                form="rows"), np.int64)
     prod = np.asarray(bbm_mul(x[:, :, None], w[None, :, :], wl, vbl,
                               kind=kind), np.int64)
     ref = np.sum(prod >> shift, axis=1)

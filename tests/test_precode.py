@@ -77,10 +77,11 @@ def test_fir_kernel_raw_vs_precoded(wl, vbl, kind):
     x = jnp.asarray(RNG.integers(0, 1 << wl, (channels, n)), jnp.int32)
     h = jnp.asarray(RNG.integers(0, 1 << wl, (channels, taps)), jnp.int32)
     raw = fir_bbm_bank(x, h, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                       bc=2, bt=128, interpret=True)
+                       bc=2, bt=128, interpret=True, form="rows")
     hmag, hneg = booth_precode(h, wl)
     pre = fir_bbm_bank_precoded(x, hmag, hneg, wl=wl, vbl=vbl, kind=kind,
-                                shift=shift, bc=2, bt=128, interpret=True)
+                                shift=shift, bc=2, bt=128, interpret=True,
+                                form="rows")
     np.testing.assert_array_equal(np.asarray(raw), np.asarray(pre))
 
 
@@ -93,10 +94,11 @@ def test_bbm_matmul_raw_vs_precoded(wl, vbl, kind):
     x = jnp.asarray(RNG.integers(0, 1 << wl, (m, k)), jnp.int32)
     w = jnp.asarray(RNG.integers(0, 1 << wl, (k, n)), jnp.int32)
     raw = bbm_matmul(x, w, wl=wl, vbl=vbl, kind=kind, shift=shift,
-                     bm=8, bk=16, bn=8, interpret=True)
+                     bm=8, bk=16, bn=8, interpret=True, form="rows")
     wmag, wneg = booth_precode(w, wl)
     pre = bbm_matmul_precoded(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
-                              shift=shift, bm=8, bk=16, bn=8, interpret=True)
+                              shift=shift, bm=8, bk=16, bn=8, interpret=True,
+                              form="rows")
     np.testing.assert_array_equal(np.asarray(raw), np.asarray(pre))
     prod = np.asarray(bbm_mul(x[:, :, None], w[None, :, :], wl, vbl,
                               kind=kind), np.int64)
