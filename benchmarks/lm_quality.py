@@ -1,42 +1,72 @@
 """Beyond-paper benchmark: the paper's SNR-vs-power tradeoff at LM scale.
 
-Trains a reduced qwen2 under exact vs approximate (noise-model) multipliers
-and reports the loss penalty next to the modeled multiplier power saving —
-the LM analogue of Table IV.  Used by `benchmarks.run` when --full is set
-(it costs ~1 min); `examples/dse_sweep.py` is the interactive version.
+Trains a reduced qwen2 under exact vs approximate multipliers and reports
+the loss penalty next to the modeled multiplier power saving — the LM
+analogue of Table IV.  Each approximate cell now carries *two* loss
+columns:
+
+  loss_noise     — §II.B white-noise proxy (quantize -> exact matmul ->
+                   calibrated noise), the scalable path;
+  loss_bitexact  — the true Broken-Booth datapath, lowered to dense
+                   contractions (``amm_dense`` mode="bitexact" on
+                   ``kernels.bbm_matmul_scaled``), affordable at model
+                   scale since the exact-dot + low-bit-correction rewrite.
+
+so the noise model is validated (or falsified) against the silicon it
+models, at the workload the repo actually cares about.  Derived metrics:
+
+  lm_bitexact_matches_oracle — 1 iff the dot-form datapath is bitwise
+      equal to the retained scalar oracle (``kernels.ref.amm_dense_ref``)
+      on this model's own MLP weights; CI gates on it.
+  worst_noise_model_gap — max |loss_bitexact - loss_noise| across cells.
+
+Used by `benchmarks.run` when --full is set (it costs a few minutes);
+``python benchmarks/lm_quality.py --smoke`` is the CI gate (short runs,
+nonzero exit on oracle mismatch), `examples/dse_sweep.py` the interactive
+version.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import AmmConfig, get_arch, reduced
 from repro.core.hwmodel import power
 from repro.core.multipliers import MulSpec
 from repro.data.pipeline import DataConfig, global_batch
+from repro.kernels.ref import amm_dense_ref
 from repro.launch.mesh import make_host_mesh
-from repro.models import ModelRuntime
+from repro.models import ModelRuntime, lm_init
+from repro.models.common import AmmRuntime, amm_dense
 from repro.train.optimizer import OptConfig
 from repro.train.trainstep import TrainConfig, init_train_state, \
     make_train_step
 
 STEPS = 10
+CELLS = (("bbm0", 13), ("bbm0", 15), ("bbm1", 13))
 
 
-def _run(mode: str, mul: str, vbl: int) -> float:
+def _cfg(mode: str, mul: str, vbl: int):
     cfg = reduced(get_arch("qwen2-0.5b"))
-    cfg = dataclasses.replace(
+    return dataclasses.replace(
         cfg, amm=AmmConfig(mode=mode, mul=mul, wl=16, param=vbl))
+
+
+def _run(mode: str, mul: str, vbl: int, steps: int = STEPS) -> float:
+    cfg = _cfg(mode, mul, vbl)
     rt = ModelRuntime.build(cfg)
     mesh = make_host_mesh(1, 1)
-    tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=STEPS))
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=steps))
     step = make_train_step(cfg, rt, tc, mesh, global_batch=4)
     params, opt = init_train_state(cfg, tc, mesh, jax.random.key(0))
     dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
     loss = 0.0
-    for i in range(STEPS):
+    for i in range(steps):
         t, l = global_batch(dc, i)
         params, opt, m = step(params, opt, jnp.asarray(t), jnp.asarray(l),
                               jax.random.fold_in(jax.random.key(1), i))
@@ -44,16 +74,115 @@ def _run(mode: str, mul: str, vbl: int) -> float:
     return loss
 
 
-def lm_quality():
-    base = _run("off", "bbm0", 0)
-    rows = [{"mul": "exact", "vbl": 0, "loss": base, "power_saving_pct": 0.0}]
+def _cell_ok(x, w, rt, spec) -> bool:
+    """Bitwise oracle equality + an oracle-independent sanity bound.
+
+    The equality alone cannot catch a defect *shared* with the oracle
+    (both sit on ``kernels.ref.amm_quantize``), so the approximate output
+    is also held to the analytic error budget against the true float
+    matmul: per product, truncation removes at most ``R * 2^vbl`` in the
+    integer domain and quantization at most half a code step per operand.
+    A quantizer regression (e.g. the bf16 wraparound that flips the sign
+    of full-scale activations) blows this budget by orders of magnitude.
+    """
+    got = np.asarray(amm_dense(x, w, rt), np.float64)
+    ref = np.asarray(amm_dense_ref(x, w, spec), np.float64)
+    if not np.array_equal(got, ref):
+        return False
+    exact = np.asarray(jnp.asarray(x, jnp.float32) @ w, np.float64)
+    k = x.shape[-1]
+    lim = 2 ** (spec.wl - 1) - 1
+    s_x = max(float(np.max(np.abs(np.asarray(x, np.float64)))) / lim, 1e-12)
+    s_w = max(float(np.max(np.abs(np.asarray(w, np.float64)))) / lim, 1e-12)
+    r_rows = (spec.param + 1) // 2
+    budget = k * (r_rows * 2.0 ** spec.param * s_x * s_w          # truncation
+                  + 0.5 * s_x * np.max(np.abs(np.asarray(w)))     # quant x
+                  + 0.5 * s_w * np.max(np.abs(np.asarray(x, np.float64)))
+                  + 0.5 * s_x * s_w)                              # cross term
+    # 2x headroom: the per-term bounds interact (Type1's +S dots, f32
+    # combine rounding) and sit within a few percent of the sum above;
+    # the defect class this guards against — e.g. a wrapped full-scale
+    # code — overshoots the budget by ~1000x, so the slack costs nothing
+    return bool(np.max(np.abs(got - exact)) <= 2 * budget)
+
+
+def bitexact_matches_oracle() -> bool:
+    """Dot-form ``amm_dense`` == scalar oracle on this model's weights.
+
+    Uses the reduced qwen2 config's own initialized MLP parameters (the
+    exact tensors a bitexact serve run contracts against) and activations
+    in **bfloat16** — the dtype ``lm_apply`` actually feeds the MLPs — at
+    the model's hidden width: the workload-shaped instance of the
+    equality the unit sweep (tests/test_amm_bitexact.py) proves on grids.
+    Every distinct sweep cell is checked, so both truncation kinds (bbm0
+    and bbm1) gate CI, not just the default.
+    """
+    params = None
+    rng = np.random.default_rng(7)
+    ok = True
+    for mul, vbl in CELLS:
+        cfg = _cfg("bitexact", mul, vbl)
+        rt = AmmRuntime.build(cfg.amm)
+        spec = MulSpec(cfg.amm.mul, cfg.amm.wl, cfg.amm.param)
+        if params is None:
+            params = lm_init(cfg, jax.random.key(0))
+        mlp = jax.tree.map(lambda p: p[0], params["layers"]["mlp"])
+        x = jnp.asarray(rng.standard_normal((8, cfg.d_model)), jnp.bfloat16)
+        for name in ("w_gate", "w_up"):
+            ok = ok and _cell_ok(x, mlp[name], rt, spec)
+        h = jnp.asarray(rng.standard_normal((8, cfg.d_ff)), jnp.bfloat16)
+        ok = ok and _cell_ok(h, mlp["w_down"], rt, spec)
+    return bool(ok)
+
+
+def lm_quality(steps: int = STEPS):
+    base = _run("off", "bbm0", 0, steps)
+    rows = [{"mul": "exact", "vbl": 0, "loss_noise": base,
+             "loss_bitexact": base, "power_saving_pct": 0.0}]
     p0 = power(MulSpec("bbm0", 16, 0))
-    for mul, vbl in (("bbm0", 13), ("bbm0", 15), ("bbm1", 13)):
-        loss = _run("noise", mul, vbl)
-        rows.append({"mul": mul, "vbl": vbl, "loss": loss,
-                     "power_saving_pct":
-                         100 * (1 - power(MulSpec(mul, 16, vbl)) / p0)})
-    worst = max(r["loss"] - base for r in rows[1:])
+    for mul, vbl in CELLS:
+        rows.append({
+            "mul": mul, "vbl": vbl,
+            "loss_noise": _run("noise", mul, vbl, steps),
+            "loss_bitexact": _run("bitexact", mul, vbl, steps),
+            "power_saving_pct":
+                100 * (1 - power(MulSpec(mul, 16, vbl)) / p0)})
+    worst = max(r["loss_bitexact"] - base for r in rows[1:])
+    gap = max(abs(r["loss_bitexact"] - r["loss_noise"]) for r in rows[1:])
     return rows, {"base_loss": base, "worst_loss_penalty": worst,
+                  "worst_noise_model_gap": gap,
+                  "lm_bitexact_matches_oracle":
+                      int(bitexact_matches_oracle()),
                   "max_power_saving_pct": max(r["power_saving_pct"]
                                               for r in rows)}
+
+
+def smoke() -> int:
+    """CI gate: short bit-exact cell + oracle equality at the LM config.
+
+    Exit 1 when the dot-form datapath diverges from the scalar oracle or
+    any loss goes non-finite — the model-scale analogue of the filterbank
+    smoke's kernel_bitexact / dotform_bitexact gates.
+    """
+    match = bitexact_matches_oracle()
+    base = _run("off", "bbm0", 0, steps=2)
+    bit = _run("bitexact", "bbm0", 13, steps=2)
+    noise = _run("noise", "bbm0", 13, steps=2)
+    out = {"lm_bitexact_matches_oracle": int(match),
+           "base_loss": base, "loss_bitexact": bit, "loss_noise": noise}
+    print(json.dumps(out, sort_keys=True))
+    finite = all(np.isfinite(v) for v in (base, bit, noise))
+    if not match:
+        print("FAIL: dot-form amm_dense != scalar oracle", file=sys.stderr)
+    if not finite:
+        print("FAIL: non-finite loss", file=sys.stderr)
+    return 0 if (match and finite) else 1
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        raise SystemExit(smoke())
+    rows, derived = lm_quality()
+    for r in rows:
+        print(r)
+    print(json.dumps(derived, sort_keys=True))

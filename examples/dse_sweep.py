@@ -55,6 +55,13 @@ def main():
         saving = 100 * (1 - power(MulSpec("bbm0", 16, vbl)) / p0)
         print(f"bbm0 WL=16 VBL={vbl:2d}:      final loss {l:.4f} "
               f"(+{l - base:+.4f})   multiplier power -{saving:.1f}%")
+    # the true datapath, not the noise proxy: since the exact-dot +
+    # low-bit-correction lowering, mode="bitexact" runs as dense
+    # contractions (O(B*N) live memory) and is affordable in the sweep —
+    # the gap to the noise row above IS the noise model's error at LM scale
+    l = run("bitexact", 13)
+    print(f"bbm0 WL=16 VBL=13 (bit-exact datapath): final loss {l:.4f} "
+          f"(+{l - base:+.4f})")
 
 
 if __name__ == "__main__":

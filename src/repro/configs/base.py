@@ -15,15 +15,21 @@ class AmmConfig:
       "off"      — exact bf16/f32 matmuls (baseline hardware)
       "noise"    — WL-bit fixed-point quantization + calibrated white-noise
                    error injection (paper §II.B, scales to 671B)
-      "bitexact" — closed-form Broken-Booth products per scalar (reduced
-                   configs / DSP validation only)
+      "bitexact" — the true Broken-Booth datapath, lowered to dense
+                   contractions (kernels.bbm_matmul_scaled: exact-dot +
+                   low-bit correction, O(B*N) live memory, bit-identical
+                   to the scalar oracle kernels.ref.amm_dense_ref).
+                   Non-Booth families (bam/kulkarni/etm) still take the
+                   scalar closed forms: reduced configs only for those.
     """
     mode: str = "off"
     mul: str = "bbm0"          # multiplier family (core.multipliers registry)
     wl: int = 16
     param: int = 13            # VBL (or K for kulkarni)
     apply_to: str = "mlp"      # "mlp" | "all" — which matmuls are approximated
-    use_pallas: bool = False   # use the fused Pallas kernel (TPU fast path)
+    use_pallas: bool = False   # mode="noise": fused quant_matmul Pallas
+                               # kernel (quantize->MXU->in-kernel noise->
+                               # descale; interpret-mode off TPU)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,8 +15,10 @@ TPU adaptation notes (this is the paper's multiplier *as a TPU kernel*):
     ``bbm(x, w) == 2^vbl * (x*wq + truncated-row terms)``.  ``form="dot"``
     computes exactly that: the dominant ``x @ wq`` contraction rides the
     hardware's native matmul units (MXU on TPU, XLA's matmul lowering on
-    CPU) and only the ``ceil(vbl/2)`` truncated digit planes are walked
-    elementwise.  ``form="rows"`` keeps the pure-VPU row emulation — still
+    CPU), and each of the ``ceil(vbl/2)`` truncated rows folds into a few
+    more narrow contractions (``_dot_scaled``: the row's K-reduction is a
+    digit dot minus a one-hot residue dot per (digit, sign) pair — no
+    (M, K, N) temporary).  ``form="rows"`` keeps the pure-VPU row emulation — still
     the bit-exact reference datapath for validating the silicon and
     calibrating the statistical noise model that the quantized fast path
     (quant_matmul) uses.  ``form=None`` auto-picks the dot form; its
@@ -51,45 +53,100 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.booth import num_pp_rows
-from .booth_rows import (bbm_rows_product_precoded, booth_high_value,
-                         booth_precode, resolve_form, scaled_trunc_rows,
+from .booth_rows import (amm_chunk_len, bbm_rows_product_precoded,
+                         booth_high_value, booth_precode, num_corr_rows,
+                         resolve_form, scaled_trunc_rows, signed_digit,
                          split_signed)
 
-__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_precoded"]
+__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_precoded",
+           "bbm_matmul_scaled"]
 
-# auto-form only: above this many int32 elements the dot form's (M, K, N)
-# truncated-row correction temporary stops being a fair trade against the
-# tiled rows kernel, so form=None falls back to streaming.  An explicit
-# form="dot" is honored regardless — the caller owns the memory then.
+# auto-form only: above this many int32 elements the shift > vbl residual
+# branch's (M, K, N) per-product temporary stops being a fair trade against
+# the tiled rows kernel, so form=None falls back to streaming there.  (The
+# shift <= vbl dot form is fully contracted and needs no such gate.)  An
+# explicit form="dot" is honored regardless — the caller owns the memory.
 _DOT_CORR_BUDGET = 1 << 26
+
+# the (signed digit, raw sign bit) pairs a radix-4 row can take, per BBM
+# kind.  Each pair is one dense contraction of the dot form's mod-term:
+# kind 0 folds the sign into the row value (the digit alone determines the
+# residue), kind 1 one's-complements (the 111 "negative zero" triplet —
+# digit 0, sign 1 — has residue (0 - 1) & mask, which is why it appears).
+_MOD_BRANCHES = {0: ((1, 0), (2, 0), (-1, 0), (-2, 0)),
+                 1: ((1, 0), (2, 0), (0, 1), (-1, 1), (-2, 1))}
+
+
+def _dot_scaled(x_s, wmag, wneg, *, wl: int, vbl: int, kind: int):
+    """``sum_k bbm(x, w) / 2^vbl`` as pure dense contractions, int32.
+
+    Every BBM product is ``2^vbl * M`` with
+    ``M = x*bq + sum_{r<R} q_r``, ``q_r = (d_r*x - neg_r*kind) >> m_r``
+    (the folded dot form).  Writing the floor as subtraction of the
+    residue, a whole row's K-reduction collapses to contractions:
+
+        sum_k q_{r,k} = [ dot(x, d_r) - kind * sum_k neg_r
+                          - sum_k ((d_r*x - neg_r*kind) mod 2^m_r) ] >> m_r
+
+    and the residue sum — the only nonlinear term — depends on ``x`` only
+    through ``x mod 2^m_r`` and on the weight only through which of the
+    few (digit, sign) pairs its row takes (``_MOD_BRANCHES``): a one-hot
+    indicator per pair turns it into ``dot(residue_pair(x), indicator)``.
+    So the whole reduction is the dominant ``x @ bq`` matmul plus a
+    handful of narrow contractions per truncated row — nothing ever
+    materializes an (M, K, N) intermediate, which is what lets the
+    ``amm_dense`` bitexact mode run at model batch sizes in O(M*N) live
+    memory.  The bracket is exactly divisible by ``2^m_r`` (it is a sum
+    of ``2^m_r * q`` terms), so the shift is an exact division.
+
+    int32-exact for chunks within ``booth_rows.amm_chunk_len(wl, vbl)``.
+    x_s: (M, K) signed codes; wmag/wneg: (wl//2, K, N) digit planes.
+    """
+    bq = booth_high_value(wmag, wneg, wl=wl, vbl=vbl)        # (K, N)
+    acc = jax.lax.dot(x_s, bq, preferred_element_type=jnp.int32)
+    for r in range(num_corr_rows(wl, vbl)):
+        m = vbl - 2 * r                   # > 0 for every correction row
+        mask = (1 << m) - 1
+        d = signed_digit(wmag[r], wneg[r])                   # (K, N)
+        rowdot = jax.lax.dot(x_s, d, preferred_element_type=jnp.int32)
+        if kind:
+            rowdot = rowdot - jnp.sum(wneg[r], axis=0,
+                                      dtype=jnp.int32)[None, :]
+        xm = x_s & mask                                      # (M, K)
+        modsum = None
+        for v, s in _MOD_BRANCHES[kind]:
+            t = (v * xm - s) & mask                          # (M, K)
+            ind = (d == v) if kind == 0 else (d == v) & (wneg[r] == s)
+            part = jax.lax.dot(t, ind.astype(jnp.int32),
+                               preferred_element_type=jnp.int32)
+            modsum = part if modsum is None else modsum + part
+        acc = acc + ((rowdot - modsum) >> m)
+    return acc
 
 
 def _matmul_dotform(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
                     shift: int):
-    """Dot-form matmul: one dense contraction + scaled truncated rows.
+    """Dot-form matmul: dense contractions + exact-division row folding.
 
-    Bit-identical to the rows kernel.  Every BBM product is ``2^vbl * M``
-    with ``M = x*wq + sum_{r<R} ((d_r*x - neg_r*kind) >> m_r)`` (see
-    ``booth_rows.dotform_scaled_bound``): the dominant term is a plain
-    ``x @ wq`` integer matmul — the MXU on TPU, XLA's matmul lowering on
-    CPU — and only the ``R = ceil(vbl/2)`` truncated digit planes walk an
-    (M, K, N) elementwise correction (the im2col trade).  Accumulating at
-    the ``2^-max(vbl, shift)`` scale keeps every partial sum inside the
-    rows-form int32 envelope.
+    Bit-identical to the rows kernel.  The ``shift <= vbl`` common case is
+    the fully contracted ``_dot_scaled`` reduction (no (M, K, N)
+    temporary); only ``shift > vbl`` — a residual floor applied per
+    product, *before* the K reduction — still walks a windowed
+    per-product term.  Accumulating at the ``2^-max(vbl, shift)`` scale
+    keeps every partial sum inside the rows-form int32 envelope
+    (``booth_rows.dotform_scaled_bound``).
     """
     _, x_s = split_signed(x, wl)
-    wq = booth_high_value(wmag, wneg, wl=wl, vbl=vbl)        # (K, N)
     u = max(shift - vbl, 0)       # per-product residual rescale (rare)
-    q = scaled_trunc_rows(x_s[:, :, None], wmag[:, None, :, :],
-                          wneg[:, None, :, :], wl=wl, vbl=vbl,
-                          kind=kind)                         # (M, K, N)
     if u == 0:
-        acc = jax.lax.dot(x_s, wq, preferred_element_type=jnp.int32)
-        if q is not None:
-            acc = acc + jnp.sum(q, axis=1, dtype=jnp.int32)
+        acc = _dot_scaled(x_s, wmag, wneg, wl=wl, vbl=vbl, kind=kind)
     else:
         # shift > vbl: the residual floor applies per product, before
-        # the K reduction
+        # the K reduction — inherently per-(m, k, n)
+        wq = booth_high_value(wmag, wneg, wl=wl, vbl=vbl)    # (K, N)
+        q = scaled_trunc_rows(x_s[:, :, None], wmag[:, None, :, :],
+                              wneg[:, None, :, :], wl=wl, vbl=vbl,
+                              kind=kind)                     # (M, K, N)
         m_prod = x_s[:, :, None] * wq[None]
         if q is not None:
             m_prod = m_prod + q
@@ -97,6 +154,56 @@ def _matmul_dotform(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
     if vbl > shift:
         acc = acc << (vbl - shift)
     return acc
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind"))
+def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
+    """``sum_k bbm(x[m,k], w[k,n])`` as float32, any K — the amm datapath.
+
+    The model-scale entry point behind ``amm_dense`` mode="bitexact":
+    contracts K in chunks of ``booth_rows.amm_chunk_len(wl, vbl)`` so
+    every chunk partial is an *exact* int32 at the ``2^-vbl`` product
+    scale (``_dot_scaled``), accumulates the partials in float32 in chunk
+    order, and rescales by ``2^vbl`` (a power of two: exact in float32).
+    K within one chunk — every LM operating point at vbl >= wl - 3 —
+    is therefore exact end to end; beyond it only the cross-chunk float32
+    adds round, at relative 2^-24.  Never materializes an (M, K, N)
+    intermediate for any K (the scalar closed forms do, which is what
+    limited the old bitexact mode to reduced configs).
+
+    x: (M, K) int32 codes; wmag/wneg: (wl//2, K, N) planes from
+    ``booth_precode``.  Returns float32 (M, N) at full product scale.
+    """
+    mm, kk = x.shape
+    n_rows, kk2, nn = wmag.shape
+    if wmag.shape != wneg.shape or n_rows != num_pp_rows(wl) or kk != kk2:
+        raise ValueError(f"digit planes {wmag.shape}/{wneg.shape} do not "
+                         f"match wl={wl}, K={kk}")
+    _, x_s = split_signed(x, wl)
+    chunk = amm_chunk_len(wl, vbl)
+    scale = float(1 << vbl)
+    if kk <= chunk:
+        return _dot_scaled(x_s, wmag, wneg, wl=wl, vbl=vbl,
+                           kind=kind).astype(jnp.float32) * scale
+    n_chunks = -(-kk // chunk)
+    pad = n_chunks * chunk - kk
+    # zero codes decode to all-zero digits (mag 0, neg 0): every padded
+    # column contributes 0 to every contraction, so padding is exact
+    x_s = jnp.pad(x_s, ((0, 0), (0, pad)))
+    wmag = jnp.pad(wmag, ((0, 0), (0, pad), (0, 0)))
+    wneg = jnp.pad(wneg, ((0, 0), (0, pad), (0, 0)))
+    xc = x_s.reshape(mm, n_chunks, chunk).transpose(1, 0, 2)
+    wmc = wmag.reshape(n_rows, n_chunks, chunk, nn).transpose(1, 0, 2, 3)
+    wnc = wneg.reshape(n_rows, n_chunks, chunk, nn).transpose(1, 0, 2, 3)
+
+    def body(acc, xs):
+        xi, mi, ni = xs
+        part = _dot_scaled(xi, mi, ni, wl=wl, vbl=vbl, kind=kind)
+        return acc + part.astype(jnp.float32), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((mm, nn), jnp.float32),
+                          (xc, wmc, wnc))
+    return acc * scale
 
 
 def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,
@@ -144,10 +251,10 @@ def bbm_matmul_precoded(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
     if n_rows != num_pp_rows(wl) or kk != kk2:
         raise ValueError(f"digit planes {wmag.shape} do not match "
                          f"wl={wl}, K={kk}")
-    if form is None and (vbl or shift) and mm * kk * nn > _DOT_CORR_BUDGET:
-        # both the truncated-row correction (vbl > 0) and the per-product
-        # residual floor (shift > vbl, incl. vbl = 0) materialize an
-        # (M, K, N) temporary; only the pure dot (vbl = shift = 0) is free
+    if form is None and shift > vbl and mm * kk * nn > _DOT_CORR_BUDGET:
+        # only the per-product residual floor (shift > vbl) still
+        # materializes an (M, K, N) temporary; the shift <= vbl dot form
+        # is fully contracted (_dot_scaled) and has no size cliff
         form = "rows"
     if resolve_form(form) == "dot":
         return _matmul_dotform(x, wmag, wneg, wl=wl, vbl=vbl, kind=kind,

@@ -71,7 +71,7 @@ import jax.numpy as jnp
 
 from ..core.booth import num_pp_rows
 
-__all__ = ["bbm_rows_product", "bbm_rows_product_precoded",
+__all__ = ["amm_chunk_len", "bbm_rows_product", "bbm_rows_product_precoded",
            "bbm_rows_product_dotform", "booth_correction",
            "booth_high_value", "booth_precode", "booth_value",
            "dotform_scaled_bound", "num_corr_rows", "resolve_form",
@@ -316,6 +316,34 @@ def dotform_scaled_bound(k: int, wl: int, vbl: int, shift: int) -> int:
     whenever the rows form is, for every vbl.  Returns that bound.
     """
     return k * 2 ** max(2 * wl - 1 - max(vbl, shift), 0)
+
+
+def amm_chunk_len(wl: int, vbl: int) -> int:
+    """Largest K-chunk the contracted dot form accumulates int32-exactly.
+
+    The contracted lowering (``bbm_matmul.bbm_matmul_scaled`` and the
+    ``amm_dense`` bitexact mode built on it) sums BBM products at their
+    natural ``2^-vbl`` scale through three int32 intermediates, each with
+    its own worst-case growth per accumulated product:
+
+      * the scaled total ``M = a*bq + sum_r q_r``:   ``2^(2wl - 1 - vbl)``
+        (``dotform_scaled_bound``),
+      * the per-row digit contraction ``dot(a, d_r)``:  ``2^wl``
+        (``|d| <= 2``, ``|a| <= 2^(wl-1)``),
+      * the per-row mod-term contraction:             ``< 2^vbl``
+        (each residue is ``< 2^m_r <= 2^vbl``).
+
+    A chunk of this length keeps every one of them strictly inside int32,
+    so chunk partials are *exact integers* and any cross-chunk combine
+    order gives the same result — the property the oracle-equality tests
+    lean on.  Returns at least 1 (``wl = 16, vbl = 0`` degenerates to
+    per-product chunks: the exact full-scale product alone fills int32).
+    """
+    bound = 2 ** 31 - 1
+    c = bound >> max(2 * wl - 1 - vbl, 0)
+    if num_corr_rows(wl, vbl):
+        c = min(c, bound >> (wl + 1), bound >> vbl)
+    return max(c, 1)
 
 
 def resolve_form(form: str | None) -> str:

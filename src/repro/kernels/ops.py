@@ -102,13 +102,16 @@ def fir_filterbank_precoded(x, hmag, hneg, *, wl: int, vbl: int,
 
 
 def quant_matmul(x, w, s_x, s_w, mu=0.0, sigma=0.0, *, wl: int = 16,
-                 seed: int = 0, interpret=None, **block_kw):
-    """Fused quantized matmul with calibrated noise injection."""
+                 seed=0, interpret=None, **block_kw):
+    """Fused quantized matmul with calibrated noise injection.
+
+    s_x, s_w and seed may be python numbers or traced scalars (they enter
+    the kernel as operands); mu and sigma are static python floats.
+    """
     if interpret is None:
         interpret = not on_tpu()
-    return _quant_matmul(x, w, float(s_x), float(s_w), float(mu),
-                         float(sigma), wl=wl, seed=seed,
-                         interpret=interpret, **block_kw)
+    return _quant_matmul(x, w, s_x, s_w, float(mu), float(sigma), wl=wl,
+                         seed=seed, interpret=interpret, **block_kw)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, interpret=None,

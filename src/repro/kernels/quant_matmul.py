@@ -13,10 +13,19 @@ bf16->f32; the noise is generated *inside the kernel* from a counter-based
 hash (squares64-style) keyed on (seed, tile coordinates, lane), so the kernel
 stays a single fused pass over VMEM tiles: quantize -> MXU -> noise -> scale.
 
+The quantization scales and the noise seed enter as tiny *operand* blocks
+(a (1, 2) f32 scale pair and a (1, 1) int32 seed, broadcast to every tile),
+not as trace-time constants: ``amm_dense`` computes its scales dynamically
+from the activations (``jnp.max(|x|)``) inside the jitted train/serve step,
+so the kernel must accept traced scalars — and a traced seed keeps one
+compiled kernel across noise draws instead of one per seed.  (mu, sigma)
+stay static: they come from the characterization cache as python floats.
+
 This is the TPU-native statement of the paper's idea at model scale: the
 quality impact of the proposed multiplier on a workload can be evaluated at
 full training/serving throughput, because the error model — not the broken
-datapath — is what executes.
+datapath — is what executes.  ``models.common.amm_dense`` reaches it via
+``AmmConfig.use_pallas`` for mode="noise".
 """
 from __future__ import annotations
 
@@ -39,8 +48,8 @@ def _hash_normal(shape, seed, salt):
     r = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 2)
     c = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
     ctr = r * jnp.uint32(0x9E3779B9) + c * jnp.uint32(0x85EBCA6B)
-    ctr = ctr + jnp.uint32(seed) * jnp.uint32(0xC2B2AE35)
-    ctr = ctr + jnp.uint32(salt) * jnp.uint32(0x27D4EB2F)
+    ctr = ctr + seed.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35)
+    ctr = ctr + salt.astype(jnp.uint32) * jnp.uint32(0x27D4EB2F)
 
     def squares(x, key):
         x = x * key
@@ -57,10 +66,13 @@ def _hash_normal(shape, seed, salt):
     return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
 
 
-def quant_matmul_kernel(x_ref, w_ref, o_ref, *, inv_sx: float, inv_sw: float,
-                        sx: float, sw: float, mu: float, sigma: float,
-                        k_total: int, n_k: int, seed: int, wl: int):
-    """One (bm, bn) tile; K streamed on grid axis 2, noise added on last step."""
+def quant_matmul_kernel(x_ref, w_ref, s_ref, seed_ref, o_ref, *, mu: float,
+                        sigma: float, k_total: int, n_k: int, wl: int):
+    """One (bm, bn) tile; K streamed on grid axis 2, noise added on last step.
+
+    s_ref: (1, 2) f32 [s_x, s_w]; seed_ref: (1, 1) int32 — the same block
+    broadcast to every grid point.
+    """
     k_idx = pl.program_id(2)
     i, j = pl.program_id(0), pl.program_id(1)
 
@@ -69,50 +81,56 @@ def quant_matmul_kernel(x_ref, w_ref, o_ref, *, inv_sx: float, inv_sw: float,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     lim = float(2 ** (wl - 1))
-    xq = jnp.clip(jnp.round(x_ref[...] * inv_sx), -lim, lim - 1)
-    wq = jnp.clip(jnp.round(w_ref[...] * inv_sw), -lim, lim - 1)
+    sx = s_ref[0, 0]
+    sw = s_ref[0, 1]
+    xq = jnp.clip(jnp.round(x_ref[...] / sx), -lim, lim - 1)
+    wq = jnp.clip(jnp.round(w_ref[...] / sw), -lim, lim - 1)
     acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
     o_ref[...] += acc
 
     @pl.when(k_idx == n_k - 1)
     def _finalize():
         salt = i * jnp.int32(7919) + j
-        z = _hash_normal(o_ref.shape, seed, salt)
+        z = _hash_normal(o_ref.shape, seed_ref[0, 0], salt)
         eps = mu * k_total + sigma * jnp.sqrt(float(k_total)) * z
         o_ref[...] = (o_ref[...] + eps) * (sx * sw)
 
 
-@functools.partial(jax.jit, static_argnames=("s_x", "s_w", "mu", "sigma",
-                                             "wl", "bm", "bk", "bn", "seed",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("mu", "sigma", "wl", "bm",
+                                             "bk", "bn", "interpret"))
 def quant_matmul(x, w, s_x, s_w, mu, sigma, *, wl: int = 16,
                  bm: int = 128, bk: int = 512, bn: int = 128,
-                 seed: int = 0, interpret: bool = False):
+                 seed=0, interpret: bool = False):
     """Fused quantize->matmul->noise->dequantize.
 
-    x: (M, K) float, w: (K, N) float; s_x, s_w: python-float quantization
-    scales (real value = code * s); mu, sigma: per-product integer-domain
-    error moments of the multiplier spec being simulated.
+    x: (M, K) float, w: (K, N) float; s_x, s_w: quantization scales (real
+    value = code * s) — python floats or traced f32 scalars; seed: python
+    int or traced int32 scalar; mu, sigma: per-product integer-domain
+    error moments of the multiplier spec being simulated (static floats
+    from the characterization cache).
     """
     mm, kk = x.shape
     _, nn = w.shape
     bm = min(bm, mm)
     bn = min(bn, nn)
     bk = min(bk, kk)
+    scales = jnp.stack([jnp.asarray(s_x, jnp.float32),
+                        jnp.asarray(s_w, jnp.float32)]).reshape(1, 2)
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1, 1)
     grid = (pl.cdiv(mm, bm), pl.cdiv(nn, bn), pl.cdiv(kk, bk))
     kernel = functools.partial(
         quant_matmul_kernel,
-        inv_sx=1.0 / s_x, inv_sw=1.0 / s_w, sx=s_x, sw=s_w,
-        mu=float(mu), sigma=float(sigma), k_total=kk, n_k=grid[2],
-        seed=seed, wl=wl)
+        mu=float(mu), sigma=float(sigma), k_total=kk, n_k=grid[2], wl=wl)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
         interpret=interpret,
-    )(x, w)
+    )(x, w, scales, seed_arr)

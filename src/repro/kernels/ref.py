@@ -5,9 +5,103 @@ import jax
 import jax.numpy as jnp
 
 from ..core.bbm import bbm_type0, bbm_type1
+from ..core.multipliers import MulSpec, mul as core_mul
+from .booth_rows import amm_chunk_len
 
-__all__ = ["bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
+__all__ = ["amm_approx_ref", "amm_dense_ref", "amm_quantize",
+           "bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
            "attention_ref"]
+
+# Booth-family specs and their closed-form truncation kind; every other
+# multiplier family has no dot-form lowering and keeps the scalar path
+AMM_BOOTH_KINDS = {"booth": 0, "bbm0": 0, "bbm1": 1}
+
+
+def amm_effective_vbl(spec: MulSpec) -> int:
+    """VBL the accumulation scale is derived from (exact booth: 0)."""
+    return 0 if spec.name == "booth" else spec.param
+
+
+def amm_quantize(v, wl: int):
+    """(int32 codes, f32 dynamic scale) — THE amm bitexact quantizer.
+
+    One definition on purpose: the datapath (``models.common``), the
+    per-parameter plane cache (``AmmRuntime.precode``) and this module's
+    oracle must quantize *bit-for-bit* identically or the suite's
+    ``assert_array_equal`` contract silently degrades to luck.  Codes are
+    ``clip(round(v / s), -lim-1, lim)`` with ``s = max|v| / lim`` floored
+    at 1e-12 (the symmetric dynamic-range grid; the most-negative code is
+    reachable only by the clip bound).
+
+    The arithmetic runs in float32 regardless of v's dtype.  This is
+    load-bearing, not cosmetic: LM activations arrive as bf16, where the
+    wl = 16 clip bound 32767 is *unrepresentable* (nearest bf16 is
+    32768) — quantizing in the input dtype emits code +32768, which the
+    Booth decode masks to the wl-bit field and reinterprets as -32768, a
+    sign flip of the largest activation that the shared-quantizer oracle
+    equality can never see — and bf16's 8-bit mantissa would coarsen the
+    code grid itself.
+    """
+    lim = 2 ** (wl - 1) - 1
+    vf = jnp.asarray(v, jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(vf)) / float(lim), 1e-12)
+    s = jax.lax.stop_gradient(s)
+    codes = jnp.clip(jnp.round(vf / s), -lim - 1, lim).astype(jnp.int32)
+    return codes, s
+
+
+def amm_approx_ref(x, w, spec: MulSpec):
+    """Scalar outer-product oracle of ``amm_dense`` mode="bitexact".
+
+    The retained reference datapath: dynamic-range quantize both operands
+    to wl-bit codes, form every scalar product through the closed forms in
+    ``core.multipliers`` (materializing the full (..., K, N) product
+    grid — which is exactly why this is the *oracle*, not the datapath),
+    reduce, and descale.  For Booth-family specs the reduction mirrors the
+    dot form's contract bit for bit: products are divided by ``2^vbl``
+    (every BBM product is divisible — see booth_rows), summed int32-exact
+    per K-chunk of ``amm_chunk_len``, and the chunk partials are combined
+    in float32 in chunk order, so oracle and dot form compute identical
+    floats whenever both are in contract.  Non-Booth families (bam,
+    kulkarni, etm) keep the historical float32 product sum.
+
+    x: (..., K) float, w: (K, N) float; returns the approximate forward
+    value (no straight-through composition — ``amm_dense_ref`` adds it).
+    """
+    wl = spec.wl
+    xq, s_x = amm_quantize(x, wl)
+    wq, s_w = amm_quantize(w, wl)
+    prod = core_mul(spec)(xq[..., :, None], wq[None, :, :])  # (..., K, N)
+    if spec.name in AMM_BOOTH_KINDS:
+        vbl = amm_effective_vbl(spec)
+        scaled = prod >> vbl                  # exact: divisible by 2^vbl
+        k = x.shape[-1]
+        chunk = amm_chunk_len(wl, vbl)
+        if k <= chunk:
+            yq = jnp.sum(scaled, axis=-2, dtype=jnp.int32
+                         ).astype(jnp.float32) * float(1 << vbl)
+        else:
+            yq = jnp.zeros(scaled.shape[:-2] + scaled.shape[-1:],
+                           jnp.float32)
+            for lo in range(0, k, chunk):     # chunk order == the scan's
+                part = jnp.sum(scaled[..., lo:lo + chunk, :], axis=-2,
+                               dtype=jnp.int32)
+                yq = yq + part.astype(jnp.float32)
+            yq = yq * float(1 << vbl)
+    else:
+        yq = jnp.sum(prod.astype(jnp.float32), axis=-2)
+    return (yq * (s_x * s_w)).astype(x.dtype)
+
+
+def amm_dense_ref(x, w, spec: MulSpec):
+    """Full ``amm_dense`` bitexact oracle including the STE composition.
+
+    Returns ``exact + (approx - exact)`` — the same float expression the
+    layer wraps in ``stop_gradient`` — so the comparison against
+    ``amm_dense`` is bitwise, not just value-of-approx.
+    """
+    exact = x @ w
+    return exact + (amm_approx_ref(x, w, spec) - exact)
 
 
 def bbm_matmul_ref(x, w, *, wl: int, vbl: int, kind: int = 0,
@@ -45,9 +139,13 @@ def quant_matmul_ref(x, w, s_x, s_w, mu, sigma, *, wl: int = 16, key=None):
 
     The kernel uses its own in-tile counter hash, so elementwise equality
     with this oracle only holds for mu = sigma = 0; with noise the tests
-    compare *moments* (see tests/test_kernels.py).
+    compare *moments* (see tests/test_kernels.py).  Scales are cast to f32
+    up front — they reach the kernel as f32 operands, and the descale
+    product ``s_x * s_w`` must round the same way here.
     """
     lim = float(2 ** (wl - 1))
+    s_x = jnp.asarray(s_x, jnp.float32)
+    s_w = jnp.asarray(s_w, jnp.float32)
     xq = jnp.clip(jnp.round(x / s_x), -lim, lim - 1)
     wq = jnp.clip(jnp.round(w / s_w), -lim, lim - 1)
     acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)

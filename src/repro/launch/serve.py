@@ -1,19 +1,27 @@
 """Serving launcher: batched decoding with the slot scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --requests 6 --max-new 16
+        --requests 6 --max-new 16 --amm bitexact --vbl 13
+
+--amm bitexact serves through the true Broken-Booth datapath (dot-form
+lowering); the Scheduler precodes every approximated weight's digit planes
+once at construction, so the per-step cost is the contraction, not the
+decode.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from ..configs import ARCH_NAMES, get_arch, reduced
+from ..configs.base import AmmConfig
 from ..models import ModelRuntime, lm_init
-from ..serve.engine import Request, Scheduler
+from ..serve.engine import Request, Scheduler, make_serve_fns
+from .mesh import make_host_mesh
 
 
 def main(argv=None):
@@ -24,14 +32,32 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--amm", choices=["off", "noise", "bitexact"],
+                    default="off")
+    ap.add_argument("--mul", default="bbm0")
+    ap.add_argument("--wl", type=int, default=16)
+    ap.add_argument("--vbl", type=int, default=13)
+    ap.add_argument("--amm-pallas", action="store_true",
+                    help="mode=noise: fused Pallas quant_matmul kernel")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
+                           param=args.vbl, use_pallas=args.amm_pallas))
     rt = ModelRuntime.build(cfg)
     params = lm_init(cfg, jax.random.key(0))
-    sched = Scheduler(cfg, rt, params, args.slots, args.max_len)
+    # jitted decode step with the digit-plane cache baked into the closure:
+    # the bitexact datapath's weight decode happens once here, every token
+    # after pays contractions only
+    mesh = make_host_mesh(1, 1)
+    planes = rt.build_planes(cfg, params)
+    _, decode_j = make_serve_fns(cfg, rt, mesh, batch=args.slots,
+                                 max_len=args.max_len, amm_planes=planes)
+    sched = Scheduler(cfg, rt, params, args.slots, args.max_len,
+                      decode_fn=decode_j)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):

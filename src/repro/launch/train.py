@@ -42,6 +42,11 @@ def main(argv=None):
     ap.add_argument("--mul", default="bbm0")
     ap.add_argument("--wl", type=int, default=16)
     ap.add_argument("--vbl", type=int, default=13)
+    ap.add_argument("--amm-pallas", action="store_true",
+                    help="mode=noise: route through the fused Pallas "
+                         "quant_matmul kernel (TPU fast path; interpreted "
+                         "on CPU).  mode=bitexact needs no flag — it "
+                         "always lowers to the dot-form contractions.")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     args = ap.parse_args(argv)
@@ -51,7 +56,7 @@ def main(argv=None):
         cfg = reduced(cfg)
     cfg = dataclasses.replace(
         cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
-                           param=args.vbl))
+                           param=args.vbl, use_pallas=args.amm_pallas))
     rt = ModelRuntime.build(cfg)
     mesh = make_host_mesh(args.mesh_data, args.mesh_model)
     tc = TrainConfig(microbatches=args.microbatches,

@@ -21,8 +21,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import AmmConfig
-from ..core.multipliers import MulSpec, mul as core_mul
+from ..core.multipliers import MulSpec
 from ..core.noise import make_noise_model
+from ..kernels.bbm_matmul import bbm_matmul_scaled
+from ..kernels.booth_rows import booth_precode
+from ..kernels.ref import (AMM_BOOTH_KINDS, amm_approx_ref,
+                           amm_effective_vbl, amm_quantize)
 
 __all__ = ["Spec", "init_params", "param_logical_axes", "rmsnorm",
            "rope_freqs", "apply_rope", "amm_dense", "AmmRuntime",
@@ -107,31 +111,112 @@ class AmmRuntime:
         nm = make_noise_model(spec, sample=1 << 18)
         return AmmRuntime(cfg, mu=nm.mean, sigma=float(np.sqrt(nm.var)))
 
+    @property
+    def spec(self) -> MulSpec:
+        return MulSpec(self.cfg.mul, self.cfg.wl, self.cfg.param)
 
-def _dyn_scale(x, wl: int):
-    lim = float(2 ** (wl - 1) - 1)
-    s = jnp.max(jnp.abs(x)) / lim
-    return jax.lax.stop_gradient(jnp.maximum(s, 1e-12))
+    @property
+    def cacheable(self) -> bool:
+        """Does mode="bitexact" run the precodable dot-form datapath?"""
+        return (self.cfg.mode == "bitexact"
+                and self.cfg.mul in AMM_BOOTH_KINDS)
+
+    def precode(self, w):
+        """Per-parameter digit-plane cache entry for one (K, N) weight.
+
+        Weights are constant across decode steps and serving requests, so
+        their dynamic quantization scale and radix-4 Booth digit planes —
+        the whole decode phase of the Broken-Booth datapath — can be
+        derived once per parameter and reused by every ``amm_dense`` call
+        (the ``dsp.PrecodedBank`` argument, at model scale).  Returns
+        ``{"mag", "neg", "s_w"}`` with planes of shape (wl//2, K, N), or
+        None when the configured mode/family has nothing to cache.
+        ``jax.vmap(rt.precode)`` handles layer-stacked (L, K, N) weights
+        (per-layer scales, planes (L, wl//2, K, N) — scan-sliceable).
+        """
+        if not self.cacheable:
+            return None
+        wq, s_w = amm_quantize(w, self.cfg.wl)
+        mag, neg = booth_precode(wq, self.cfg.wl)
+        return {"mag": mag, "neg": neg, "s_w": s_w}
 
 
-def amm_dense(x, w, rt: AmmRuntime, key=None):
+def _amm_bitexact_approx(x, w, rt: AmmRuntime, planes=None):
+    """Forward value of mode="bitexact": the dot-form Broken-Booth matmul.
+
+    Booth-family specs run on ``kernels.bbm_matmul_scaled``: quantize to
+    int codes, contract via the folded dot form (exact ``x @ bq`` integer
+    matmul + a few narrow contractions per truncated row, int32-exact in
+    K-chunks), descale — bit-identical to the scalar closed forms
+    (``kernels.ref.amm_dense_ref``) but O(M*N) live memory instead of the
+    oracle's (..., K, N) product grid, so it serves real model shapes.
+    Non-Booth families (bam/kulkarni/etm) have no dot lowering and keep
+    the scalar oracle path (reduced configs only, as before).
+
+    ``planes``: optional ``AmmRuntime.precode(w)`` cache entry — skips
+    the per-call weight quantization + digit decode; bit-identical to the
+    uncached path.
+    """
+    cfg = rt.cfg
+    kind = AMM_BOOTH_KINDS.get(cfg.mul)
+    if kind is None:
+        return amm_approx_ref(x, w, rt.spec)
+    wl = cfg.wl
+    vbl = amm_effective_vbl(rt.spec)
+    xq, s_x = amm_quantize(x, wl)
+    if planes is None:
+        planes = rt.precode(w)
+    s_w = planes["s_w"]
+    yq = bbm_matmul_scaled(xq.reshape(-1, x.shape[-1]), planes["mag"],
+                           planes["neg"], wl=wl, vbl=vbl, kind=kind)
+    yq = yq.reshape(x.shape[:-1] + (w.shape[-1],))
+    return (yq * (s_x * s_w)).astype(x.dtype)
+
+
+def amm_dense(x, w, rt: AmmRuntime, key=None, planes=None):
     """Matmul over the last axis of x with the paper's technique applied.
 
     Straight-through estimator: gradients flow through the exact product;
     the forward value carries the quantization + approximate-multiplier
     error.  x: (..., K), w: (K, N).
+
+    planes: optional per-parameter cache from ``AmmRuntime.precode(w)``
+    (mode="bitexact" only) — the weight-side decode phase hoisted out of
+    the hot loop; bit-identical with or without.
     """
     cfg = rt.cfg
     exact = x @ w
     if cfg.mode == "off":
         return exact
     if cfg.mode == "noise":
-        s_x = _dyn_scale(x, cfg.wl)
-        s_w = _dyn_scale(w, cfg.wl)
-        lim = float(2 ** (cfg.wl - 1) - 1)
-        xq = jnp.round(jnp.clip(x / s_x, -lim - 1, lim)).astype(jnp.float32)
-        wq = jnp.round(jnp.clip(w / s_w, -lim - 1, lim)).astype(jnp.float32)
-        yq = xq @ wq
+        # one quantizer for both amm modes (kernels.ref.amm_quantize):
+        # the noise and bitexact columns of lm_quality must sit on the
+        # same code grid or their gap stops measuring the noise model.
+        # XLA dead-code-eliminates the unused codes on the pallas branch
+        # (the kernel quantizes in-tile from the same scales).
+        xq_i, s_x = amm_quantize(x, cfg.wl)
+        wq_i, s_w = amm_quantize(w, cfg.wl)
+        if cfg.use_pallas:
+            # fused Pallas path: quantize -> matmul -> in-kernel hash
+            # noise -> descale, one pass over VMEM tiles (interpret-mode
+            # off TPU).  Seeded from `key` so draws differ across steps.
+            from ..kernels.ops import quant_matmul
+            seed = (jnp.int32(0) if key is None
+                    else jax.random.randint(key, (), 0, 2 ** 31 - 1,
+                                            jnp.int32))
+            # the kernel has no JVP rule and needs none: the STE routes
+            # every gradient through `exact`, so cut the tangents at the
+            # kernel's operands instead of after its output
+            sg = jax.lax.stop_gradient
+            yq = quant_matmul(
+                sg(x.reshape(-1, x.shape[-1]).astype(jnp.float32)),
+                sg(w.astype(jnp.float32)), s_x, s_w,
+                rt.mu if key is not None else 0.0,
+                rt.sigma if key is not None else 0.0,
+                wl=cfg.wl, seed=seed)
+            approx = yq.reshape(x.shape[:-1] + (w.shape[-1],)).astype(x.dtype)
+            return exact + jax.lax.stop_gradient(approx - exact)
+        yq = xq_i.astype(jnp.float32) @ wq_i.astype(jnp.float32)
         k_len = x.shape[-1]
         if key is not None and (rt.mu != 0.0 or rt.sigma != 0.0):
             z = jax.random.normal(key, yq.shape, jnp.float32)
@@ -139,15 +224,7 @@ def amm_dense(x, w, rt: AmmRuntime, key=None):
         approx = (yq * (s_x * s_w)).astype(x.dtype)
         return exact + jax.lax.stop_gradient(approx - exact)
     if cfg.mode == "bitexact":
-        spec = MulSpec(cfg.mul, cfg.wl, cfg.param)
-        s_x = _dyn_scale(x, cfg.wl)
-        s_w = _dyn_scale(w, cfg.wl)
-        lim = 2 ** (cfg.wl - 1) - 1
-        xq = jnp.clip(jnp.round(x / s_x), -lim - 1, lim).astype(jnp.int32)
-        wq = jnp.clip(jnp.round(w / s_w), -lim - 1, lim).astype(jnp.int32)
-        prod = core_mul(spec)(xq[..., :, None], wq[None, :, :])
-        yq = jnp.sum(prod.astype(jnp.float32), axis=-2)
-        approx = (yq * (s_x * s_w)).astype(x.dtype)
+        approx = _amm_bitexact_approx(x, w, rt, planes=planes)
         return exact + jax.lax.stop_gradient(approx - exact)
     raise ValueError(f"unknown amm mode {cfg.mode!r}")
 

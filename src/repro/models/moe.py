@@ -34,13 +34,17 @@ def mlp_table(d_model: int, d_ff: int, prefix_axes=("embed", "mlp")) -> Dict:
     }
 
 
-def mlp_apply(p, x, amm=None, key=None):
+def mlp_apply(p, x, amm=None, key=None, planes=None):
+    """Gated MLP; ``planes`` is the optional per-weight digit-plane cache
+    (``{"w_gate": .., "w_up": .., "w_down": ..}`` of ``AmmRuntime.precode``
+    entries) for the bitexact approximate-matmul datapath."""
     from .common import amm_dense
     if amm is not None and amm.cfg.mode != "off":
-        g = amm_dense(x, p["w_gate"], amm, key)
-        u = amm_dense(x, p["w_up"], amm, key)
+        pl_ = planes or {}
+        g = amm_dense(x, p["w_gate"], amm, key, planes=pl_.get("w_gate"))
+        u = amm_dense(x, p["w_up"], amm, key, planes=pl_.get("w_up"))
         h = jax.nn.silu(g) * u
-        return amm_dense(h, p["w_down"], amm, key)
+        return amm_dense(h, p["w_down"], amm, key, planes=pl_.get("w_down"))
     h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
     return h @ p["w_down"]
 
@@ -91,9 +95,10 @@ def _dispatch(expert_ids, top_k: int, n_tokens: int, n_experts: int,
 
 
 def moe_apply(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25,
-              amm=None, key=None,
-              gather_weights: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) -> (y, aux_loss).
+              amm=None, key=None, gather_weights: bool = False,
+              planes=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).  ``planes``: optional digit-plane
+    cache for the shared-expert MLP (``{"shared": {...}}``).
 
     Decode (s == 1) runs dropless (capacity = T): a decode step must not
     lose expert contributions to capacity, and the buffers are tiny there.
@@ -152,5 +157,6 @@ def moe_apply(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25,
                    gate_vals.astype(per_decision.dtype))
 
     if cfg.n_shared_experts:
-        y = y + mlp_apply(p["shared"], xf, amm, key)
+        y = y + mlp_apply(p["shared"], xf, amm, key,
+                          planes=(planes or {}).get("shared"))
     return y.reshape(b, s, d), aux

@@ -31,8 +31,8 @@ from .common import (AmmRuntime, Spec, cross_entropy_loss, init_params,
 from .mamba2 import mamba_apply, mamba_table
 from .moe import mlp_apply, mlp_table, moe_apply, moe_table
 
-__all__ = ["lm_table", "lm_init", "lm_apply", "lm_loss", "init_cache",
-           "ModelRuntime"]
+__all__ = ["lm_table", "lm_init", "lm_apply", "lm_amm_planes", "lm_loss",
+           "init_cache", "ModelRuntime"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +60,16 @@ class ModelRuntime:
         return ModelRuntime(AmmRuntime.build(cfg.amm), remat, use_pallas,
                             attn_remat, shard_heads, causal_skip,
                             moe_gather_weights, attn_p_bf16)
+
+    def build_planes(self, cfg: ArchConfig, params):
+        """Per-parameter Booth digit-plane cache for these weights.
+
+        Convenience for serving/eval entry points whose params are fixed:
+        ``lm_apply(..., amm_planes=rt.build_planes(cfg, params))`` hoists
+        the bitexact datapath's weight decode phase out of every step.
+        None when the configured amm mode caches nothing.
+        """
+        return lm_amm_planes(cfg, self.amm, params)
 
 
 # ----------------------------------------------------------------- tables
@@ -149,6 +159,45 @@ def lm_init(cfg: ArchConfig, key, dtype=jnp.float32):
     return init_params(lm_table(cfg), key, dtype)
 
 
+def lm_amm_planes(cfg: ArchConfig, amm: AmmRuntime, params):
+    """Booth digit-plane cache for every amm-approximated weight.
+
+    The bitexact approximate-matmul datapath quantizes and radix-4-decodes
+    its weight operand on every call; weights are constant across decode
+    steps and serving requests, so the whole decode phase (dynamic scale +
+    digit planes, ``AmmRuntime.precode``) is derived once here and
+    threaded through ``lm_apply(amm_planes=...)``.  The tree is sparse —
+    it mirrors ``params`` only where ``amm_dense`` is actually applied
+    (the gated MLPs: dense/vlm/audio layer stacks, the MoE dense prefix
+    and shared experts, the hybrid shared block) — and layer-stacked
+    entries keep the layers axis leading so ``jax.lax.scan`` slices them
+    exactly like the parameters.  Returns None when nothing is cacheable
+    (mode != "bitexact", non-Booth family, SSM-only or encoder-decoder
+    configs — the latter fall back to per-call precode inside the layer).
+    """
+    if not amm.cacheable:
+        return None
+    stacked = jax.vmap(amm.precode)           # (L, K, N) -> per-layer cache
+
+    def mlp(p_mlp, is_stacked):
+        f = stacked if is_stacked else amm.precode
+        return {k: f(p_mlp[k]) for k in ("w_gate", "w_up", "w_down")}
+
+    if cfg.family in ("dense", "vlm", "audio") and not cfg.is_encoder_decoder:
+        return {"layers": {"mlp": mlp(params["layers"]["mlp"], True)}}
+    if cfg.family == "moe":
+        planes = {"dense_prefix": [{"mlp": mlp(p["mlp"], False)}
+                                   for p in params["dense_prefix"]]}
+        if cfg.n_shared_experts:
+            planes["layers"] = {"moe": {"shared": mlp(
+                params["layers"]["moe"]["shared"], True)}}
+        return planes
+    if cfg.family == "hybrid":
+        return {"shared_block": {"mlp": mlp(params["shared_block"]["mlp"],
+                                            False)}}
+    return None
+
+
 def lm_logical_axes(cfg: ArchConfig):
     return param_logical_axes(lm_table(cfg))
 
@@ -210,20 +259,23 @@ def _attn_block(p, h, cfg, rt, *, positions, cache=None, pos=None, kv=None):
     return h + y.astype(h.dtype), new_cache
 
 
-def _dense_block(p, h, cfg, rt, key, *, positions, cache=None, pos=None):
+def _dense_block(p, h, cfg, rt, key, *, positions, cache=None, pos=None,
+                 planes=None):
     h, new_cache = _attn_block(p, h, cfg, rt, positions=positions,
                                cache=cache, pos=pos)
     y = mlp_apply(p["mlp"], rmsnorm(h, p["mlp_norm"], cfg.norm_eps),
-                  rt.amm, key)
+                  rt.amm, key, planes=(planes or {}).get("mlp"))
     return h + y.astype(h.dtype), new_cache
 
 
-def _moe_block(p, h, cfg, rt, key, *, positions, cache=None, pos=None):
+def _moe_block(p, h, cfg, rt, key, *, positions, cache=None, pos=None,
+               planes=None):
     h, new_cache = _attn_block(p, h, cfg, rt, positions=positions,
                                cache=cache, pos=pos)
     y, aux = moe_apply(p["moe"], rmsnorm(h, p["mlp_norm"], cfg.norm_eps),
                        cfg, amm=rt.amm, key=key,
-                       gather_weights=rt.moe_gather_weights)
+                       gather_weights=rt.moe_gather_weights,
+                       planes=(planes or {}).get("moe"))
     return h + y.astype(h.dtype), new_cache, aux
 
 
@@ -237,16 +289,20 @@ def _ssm_block(p, h, cfg, rt, *, state=None, conv_state=None):
 # ------------------------------------------------------------------- apply
 def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
              mode: str = "train", caches=None, pos=None, rng=None,
-             encoder_embeds=None):
+             encoder_embeds=None, amm_planes=None):
     """Forward pass.
 
     tokens: (B, S) int32 (for mode="decode", S == 1).
     encoder_embeds: (B, enc_len, d) precomputed frame embeddings (whisper
     stub frontend).
+    amm_planes: optional ``lm_amm_planes`` cache — the bitexact
+    approximate-matmul weight decode hoisted out of the step (serving:
+    built once at engine construction).  Bit-identical to passing None.
     Returns (logits, aux_losses, new_caches).
     """
     if rng is None:
         rng = jax.random.key(0)
+    amm_planes = amm_planes or {}
     h = params["embed"][tokens].astype(jnp.bfloat16)
     b, s = tokens.shape
     positions = (jnp.arange(s)[None, :] + (pos if pos is not None else 0)
@@ -282,18 +338,18 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
     if cfg.family in ("dense", "vlm", "audio") and not cfg.is_encoder_decoder:
         def layer(carry, xs):
             hh, key = carry
-            p_l, cache_l = xs
+            p_l, cache_l, planes_l = xs
             key, sub = jax.random.split(key)
             hh, new_c = _dense_block(
                 p_l, hh, cfg, rt, sub, positions=positions,
-                cache=cache_l, pos=pos)
+                cache=cache_l, pos=pos, planes=planes_l)
             return (hh, key), new_c
 
         cache_xs = ({"k": caches["k"], "v": caches["v"]}
                     if caches is not None else None)
         (h, _), new_kv = jax.lax.scan(
             maybe_remat(layer), (h, rng),
-            (params["layers"], cache_xs))
+            (params["layers"], cache_xs, amm_planes.get("layers")))
         if caches is not None:
             new_caches = new_kv
 
@@ -344,6 +400,7 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
 
     elif cfg.family == "moe":
         # unstacked dense prefix
+        prefix_planes = amm_planes.get("dense_prefix") or []
         prefix_new = []
         for i, p_l in enumerate(params["dense_prefix"]):
             cache_l = (jax.tree.map(lambda c: c[i], caches)
@@ -351,16 +408,20 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
             rng, sub = jax.random.split(rng)
             h, new_c = _dense_block(p_l, h, cfg, rt, sub,
                                     positions=positions,
-                                    cache=cache_l, pos=pos)
+                                    cache=cache_l, pos=pos,
+                                    planes=(prefix_planes[i]
+                                            if i < len(prefix_planes)
+                                            else None))
             prefix_new.append(new_c)
 
         def layer(carry, xs):
             hh, key, aux = carry
-            p_l, cache_l = xs
+            p_l, cache_l, planes_l = xs
             key, sub = jax.random.split(key)
             hh, new_c, aux_l = _moe_block(p_l, hh, cfg, rt, sub,
                                           positions=positions,
-                                          cache=cache_l, pos=pos)
+                                          cache=cache_l, pos=pos,
+                                          planes=planes_l)
             return (hh, key, aux + aux_l), new_c
 
         k_pref = cfg.first_k_dense
@@ -368,7 +429,7 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
                     if caches is not None else None)
         (h, _, aux_total), new_kv = jax.lax.scan(
             maybe_remat(layer), (h, rng, aux_total),
-            (params["layers"], cache_xs))
+            (params["layers"], cache_xs, amm_planes.get("layers")))
         if caches is not None:
             # re-assemble the full layer-stacked cache (prefix + scanned)
             stacked_prefix = jax.tree.map(
@@ -424,7 +485,9 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
                        if st_g is not None else None)
             hh, new_kv_g = _dense_block(shared, hh, cfg, rt, sub,
                                         positions=positions,
-                                        cache=cache_g, pos=pos)
+                                        cache=cache_g, pos=pos,
+                                        planes=amm_planes.get(
+                                            "shared_block"))
             out = None
             if st_g is not None:
                 out = {"ssm": new_inner["ssm"], "conv": new_inner["conv"],
@@ -446,10 +509,16 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
 
 def lm_loss(params, cfg: ArchConfig, rt: ModelRuntime, tokens, labels, *,
             rng=None, encoder_embeds=None, moe_aux_weight: float = 1e-2,
-            mtp_weight: float = 0.1):
-    """Training loss: next-token CE + MoE aux (+ MTP if configured)."""
+            mtp_weight: float = 0.1, amm_planes=None):
+    """Training loss: next-token CE + MoE aux (+ MTP if configured).
+
+    amm_planes is accepted for API symmetry with ``lm_apply`` (eval loss
+    over fixed weights); training steps pass None — the weights change
+    every update, so there is nothing to cache across calls.
+    """
     logits, aux, _ = lm_apply(params, cfg, rt, tokens, mode="train", rng=rng,
-                              encoder_embeds=encoder_embeds)
+                              encoder_embeds=encoder_embeds,
+                              amm_planes=amm_planes)
     loss = cross_entropy_loss(logits, labels)
     total = loss + moe_aux_weight * aux["moe_aux"]
     metrics = {"ce": loss, "moe_aux": aux["moe_aux"]}

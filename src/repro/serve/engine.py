@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..models import ModelRuntime, init_cache, lm_apply
+from ..models import ModelRuntime, init_cache, lm_amm_planes, lm_apply
 from ..parallel.logical import (RULES, RULES_MULTIPOD, batch_pspec,
                                 is_multipod, spec_to_pspec, tree_shardings)
 
@@ -81,8 +81,14 @@ def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
 
 
 def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
-                   batch: int, max_len: int):
-    """(prefill_fn, decode_fn) jitted with explicit shardings."""
+                   batch: int, max_len: int, amm_planes=None):
+    """(prefill_fn, decode_fn) jitted with explicit shardings.
+
+    amm_planes: optional ``lm_amm_planes`` cache for the bitexact
+    approximate-matmul datapath — serving weights are fixed, so the
+    weight-side quantize + Booth decode happens once here instead of in
+    every prefill/decode step (the closures capture the concrete planes).
+    """
     from ..models import lm_logical_axes, lm_table
     p_rules = RULES_MULTIPOD if is_multipod(mesh) else RULES
     p_sh = tree_shardings(lm_logical_axes(cfg), mesh, p_rules,
@@ -94,13 +100,14 @@ def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
     def prefill(params, tokens, caches, encoder_embeds=None):
         logits, _, new_caches = lm_apply(
             params, cfg, rt, tokens, mode="decode", caches=caches,
-            pos=jnp.int32(0), encoder_embeds=encoder_embeds)
+            pos=jnp.int32(0), encoder_embeds=encoder_embeds,
+            amm_planes=amm_planes)
         return logits[:, -1], new_caches
 
     def decode(params, tokens, caches, pos, encoder_embeds=None):
         logits, _, new_caches = lm_apply(
             params, cfg, rt, tokens, mode="decode", caches=caches, pos=pos,
-            encoder_embeds=encoder_embeds)
+            encoder_embeds=encoder_embeds, amm_planes=amm_planes)
         return logits[:, -1], new_caches
 
     enc_sh = (b_sh,) if cfg.is_encoder_decoder else ()
@@ -217,6 +224,14 @@ class Scheduler:
         self.caches = init_cache(cfg, batch_slots, max_len)
         self.queue: List[Request] = []
         self.decode_fn = decode_fn
+        # serving weights are fixed: hoist the bitexact datapath's weight
+        # quantize + Booth digit decode out of the decode loop (None for
+        # amm modes with nothing to cache).  A supplied decode_fn owns its
+        # own closure (launch/serve.py bakes the planes into the jitted
+        # fn) — only the fallback path needs a cache here, so don't build
+        # and hold a second copy of the (wl//2, K, N) planes.
+        self.amm_planes = (lm_amm_planes(cfg, rt.amm, params)
+                           if decode_fn is None else None)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -242,11 +257,13 @@ class Scheduler:
             toks[i, 0] = (s._pending.pop(0) if s._pending
                           else (s.out[-1] if s.out else 0))
         pos = int(self.pos[live[0]])   # homogeneous-pos simplification
-        fn = self.decode_fn or (lambda p, t, c, q: (
-            lm_apply(p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
-                     caches=c, pos=jnp.int32(q))[0][:, -1],
-            lm_apply(p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
-                     caches=c, pos=jnp.int32(q))[2]))
+        def _default_fn(p, t, c, q):
+            logits, _, new_c = lm_apply(
+                p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
+                caches=c, pos=jnp.int32(q), amm_planes=self.amm_planes)
+            return logits[:, -1], new_c
+
+        fn = self.decode_fn or _default_fn
         logits, self.caches = fn(self.params, jnp.asarray(toks),
                                  self.caches, jnp.int32(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))

@@ -1,0 +1,329 @@
+"""Oracle/calibration suite for the model-scale bit-exact amm datapath.
+
+``amm_dense`` mode="bitexact" now lowers the Broken-Booth datapath to
+dense contractions (``kernels.bbm_matmul_scaled``: exact-dot + low-bit
+correction, int32-exact K-chunks).  The retained scalar outer-product
+path lives on as the oracle (``kernels.ref.amm_dense_ref``); this suite
+holds the two to *bitwise* equality across wl x vbl x multiplier family
+x apply_to, at envelope-boundary operands, through the per-parameter
+digit-plane cache, and at the LM configs — and proves the structural
+claim (no (..., K, N) intermediate) on the jaxpr itself.
+
+It also ties the two amm modes to each other for the first time: the
+per-product error moments the "noise" mode injects must match the
+empirical error of the "bitexact" closed forms, and the fused Pallas
+quant_matmul path (AmmConfig.use_pallas) must agree with the plain noise
+path numerically and draw calibrated noise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import AmmConfig, get_arch, reduced
+from repro.core.booth import to_signed
+from repro.core.multipliers import MulSpec, mul as core_mul
+from repro.core.noise import make_noise_model
+from repro.kernels.booth_rows import amm_chunk_len
+from repro.kernels.ref import amm_approx_ref, amm_dense_ref, amm_quantize
+from repro.models.common import AmmRuntime, amm_dense
+
+RNG = np.random.default_rng(11)
+
+# (mul, wl, vbl): Booth family across word lengths (dot-form datapath),
+# the exact multiplier (vbl = 0, per-product chunks at wl = 16), a
+# multi-chunk point ((16, 3): single-digit chunk length, so modest K
+# already splits), and the sign-magnitude families that keep the scalar
+# path
+SWEEP = [("bbm0", 8, 5), ("bbm1", 8, 7), ("bbm0", 12, 7), ("bbm1", 12, 11),
+         ("bbm0", 16, 13), ("bbm1", 16, 15), ("bbm0", 16, 3),
+         ("booth", 12, 0), ("booth", 16, 0), ("bam", 8, 4),
+         ("kulkarni", 8, 3)]
+
+
+def _rt(mul, wl, vbl, apply_to="mlp", mode="bitexact", use_pallas=False):
+    return AmmRuntime.build(AmmConfig(mode=mode, mul=mul, wl=wl, param=vbl,
+                                      apply_to=apply_to,
+                                      use_pallas=use_pallas))
+
+
+def _operands(m=7, k=24, n=9, seed=3):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k))
+    w = rng.standard_normal((k, n))
+    # boundary rows/cols: entries that quantize to the full-scale codes
+    # +/-lim (the quantizer's envelope edge) in every contraction
+    x[0, :] = np.abs(x).max() * 1.5
+    x[1, :] = -np.abs(x).max()
+    w[:, 0] = np.abs(w).max() * 1.5
+    w[:, 1] = -np.abs(w).max()
+    return jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32)
+
+
+# ------------------------------------------------- dot form vs the oracle
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_amm_dense_matches_oracle(mul, wl, vbl):
+    x, w = _operands()
+    rt = _rt(mul, wl, vbl)
+    got = np.asarray(amm_dense(x, w, rt))
+    ref = np.asarray(amm_dense_ref(x, w, MulSpec(mul, wl, vbl)))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_apply_to_is_model_level_routing_only():
+    """``AmmConfig.apply_to`` selects *which* model matmuls are
+    approximated; it is not (and must not become) an input to the
+    per-matmul datapath.  Today only the gated MLPs route through
+    ``amm_dense`` under either value, so the layer's output — and its
+    oracle equality — is identical across the axis; if a future PR wires
+    apply_to="all" into attention, this pins that the datapath itself
+    stays apply_to-independent."""
+    x, w = _operands()
+    for mul, wl, vbl in (("bbm0", 16, 13), ("bam", 8, 4)):
+        a = np.asarray(amm_dense(x, w, _rt(mul, wl, vbl, "mlp")))
+        b = np.asarray(amm_dense(x, w, _rt(mul, wl, vbl, "all")))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(
+            a, np.asarray(amm_dense_ref(x, w, MulSpec(mul, wl, vbl))))
+
+
+@pytest.mark.parametrize("k_extra", [0, 1, 7])
+def test_amm_dense_chunk_boundary(k_extra):
+    """K at and just past the int32-exact chunk length, full-scale codes.
+
+    (16, 3) has a single-digit chunk length (the scaled envelope
+    ``2^(2wl-1-vbl)`` leaves only ``2^vbl`` products of headroom at
+    wl = 16): K = chunk is the largest single-chunk accumulation,
+    K = chunk + 1/chunk + 7 force the cross-chunk float32 combine — the
+    partials sit at the accumulator envelope and must still match the
+    oracle bit for bit.
+    """
+    wl, vbl = 16, 3
+    chunk = amm_chunk_len(wl, vbl)
+    assert 1 < chunk < 16          # genuinely exercises the chunked path
+    k = chunk + k_extra
+    rng = np.random.default_rng(5)
+    # constant-magnitude operands quantize to +/-lim everywhere: every
+    # partial product sits at the scaled envelope edge
+    x = jnp.asarray(np.where(rng.random((5, k)) < 0.5, -1.0, 1.0),
+                    jnp.float32)
+    w = jnp.asarray(np.where(rng.random((k, 6)) < 0.5, -1.0, 1.0),
+                    jnp.float32)
+    rt = _rt("bbm0", wl, vbl)
+    np.testing.assert_array_equal(
+        np.asarray(amm_dense(x, w, rt)),
+        np.asarray(amm_dense_ref(x, w, MulSpec("bbm0", wl, vbl))))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_amm_dense_batched_inputs(dtype):
+    """(B, S, K) activations — the model's actual calling convention."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)), dtype)
+    w = jnp.asarray(rng.standard_normal((16, 11)), jnp.float32)
+    rt = _rt("bbm0", 12, 7)
+    got = amm_dense(x, w, rt)
+    ref = amm_dense_ref(x, w, MulSpec("bbm0", 12, 7))
+    assert got.dtype == (x @ w).dtype    # STE rides the exact product
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+def test_amm_dense_bf16_fullscale_no_wraparound():
+    """bf16 activations at full scale must not wrap to the negative code.
+
+    The wl = 16 clip bound 32767 is unrepresentable in bf16 (nearest is
+    32768); a quantizer that rounds/clips in the input dtype emits code
+    +32768, which the Booth decode masks to the wl-bit field and
+    reinterprets as -32768 — flipping the sign of the largest activation.
+    The oracle shares the quantizer, so bitwise equality alone cannot see
+    it: this pins the output against the *exact* product instead.
+    ``lm_apply`` feeds the MLPs bf16, so this is the serving dtype.
+    """
+    wl, vbl = 16, 13
+    x = jnp.ones((4, 16), jnp.bfloat16)          # quantizes to +lim each
+    w = jnp.asarray(np.full((16, 6), 0.5), jnp.float32)
+    got = np.asarray(amm_dense(x, w, _rt("bbm0", wl, vbl)), np.float64)
+    exact = np.asarray(jnp.asarray(x, jnp.float32) @ w, np.float64)
+    # truncation removes < K * R * 2^vbl * s_x * s_w ~ 1e-3 here; a
+    # wrapped code would be off by ~2 * exact
+    assert np.all(got > 0)
+    np.testing.assert_allclose(got, exact, rtol=5e-3)
+    # and the codes themselves stay inside the signed wl-bit field
+    codes, _ = amm_quantize(x, wl)
+    assert int(jnp.max(codes)) <= 2 ** (wl - 1) - 1
+    assert int(jnp.min(codes)) >= -(2 ** (wl - 1))
+
+
+@given(seed=st.integers(0, 1000), m=st.integers(1, 9), k=st.integers(1, 40),
+       n=st.integers(1, 9), idx=st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_prop_amm_dense_matches_oracle(seed, m, k, n, idx):
+    mul, wl, vbl = [("bbm0", 16, 13), ("bbm1", 16, 15), ("bbm0", 12, 7),
+                    ("bbm1", 8, 5), ("bbm0", 16, 3), ("booth", 12, 0)][idx]
+    rng = np.random.default_rng(seed)
+    scale = 10.0 ** rng.integers(-3, 4)
+    x = jnp.asarray(rng.standard_normal((m, k)) * scale, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * scale, jnp.float32)
+    got = np.asarray(amm_dense(x, w, _rt(mul, wl, vbl)))
+    ref = np.asarray(amm_dense_ref(x, w, MulSpec(mul, wl, vbl)))
+    np.testing.assert_array_equal(got, ref)
+
+
+# --------------------------------------------------- structural guarantee
+def test_amm_dense_never_materializes_kn():
+    """No intermediate in the whole jaxpr reaches M*K*N elements.
+
+    The oracle's defining memory cliff is the (..., K, N) scalar product
+    grid; the dot-form datapath must not have one anywhere — including
+    inside nested pjit/scan jaxprs.  (The planes are (wl//2, K, N); M is
+    chosen > wl//2 so they stay under the bar too.)
+    """
+    m, k, n = 31, 48, 29
+    x = jnp.zeros((m, k), jnp.float32)
+    w = jnp.zeros((k, n), jnp.float32)
+
+    def collect(jaxpr, out):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                if hasattr(v.aval, "shape"):
+                    out.append(tuple(v.aval.shape))
+            for p in eqn.params.values():
+                recurse(p, out)
+
+    def recurse(p, out):
+        if hasattr(p, "eqns"):                 # Jaxpr
+            collect(p, out)
+        elif hasattr(p, "jaxpr"):              # ClosedJaxpr
+            recurse(p.jaxpr, out)
+        elif isinstance(p, (list, tuple)):
+            for q in p:
+                recurse(q, out)
+
+    for vbl in (13, 3):                        # single- and multi-chunk
+        rt = _rt("bbm0", 16, vbl)
+        jaxpr = jax.make_jaxpr(lambda a, b: amm_dense(a, b, rt))(x, w)
+        shapes = []
+        collect(jaxpr.jaxpr, shapes)
+        sizes = [int(np.prod(s)) for s in shapes if s]
+        assert sizes, "expected a non-trivial jaxpr"
+        assert max(sizes) < m * k * n, (
+            f"vbl={vbl}: intermediate of {max(sizes)} elements >= "
+            f"M*K*N = {m * k * n}")
+
+
+def test_amm_gradients_are_ste_on_dot_path():
+    """The rewrite must keep the straight-through estimator contract."""
+    rt = _rt("bbm0", 16, 13)
+    x = jnp.asarray(RNG.standard_normal((4, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((8, 4)), jnp.float32)
+    g1 = jax.grad(lambda ww: jnp.sum(amm_dense(x, ww, rt)))(w)
+    g2 = jax.grad(lambda ww: jnp.sum(x @ ww))(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+# ------------------------------------------------- digit-plane cache path
+def test_amm_dense_planes_bit_identical():
+    x, w = _operands()
+    for mul, wl, vbl in (("bbm0", 16, 13), ("bbm1", 12, 11), ("bbm0", 16, 3)):
+        rt = _rt(mul, wl, vbl)
+        planes = rt.precode(w)
+        assert planes is not None
+        assert planes["mag"].shape == (wl // 2,) + w.shape
+        np.testing.assert_array_equal(
+            np.asarray(amm_dense(x, w, rt)),
+            np.asarray(amm_dense(x, w, rt, planes=planes)))
+
+
+def test_amm_precode_none_when_not_cacheable():
+    x, w = _operands()
+    assert _rt("bam", 8, 4).precode(w) is None
+    assert _rt("bbm0", 16, 13, mode="noise").precode(w) is None
+    assert _rt("bbm0", 16, 13, mode="off").precode(w) is None
+
+
+def test_lm_apply_planes_bit_identical():
+    """End to end through the reduced qwen2: cached planes == inline."""
+    from repro.models import ModelRuntime, lm_amm_planes, lm_apply, lm_init
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
+                                                 wl=16, param=13))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    planes = lm_amm_planes(cfg, rt.amm, params)
+    assert planes is not None
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    l0, _, _ = lm_apply(params, cfg, rt, toks, rng=jax.random.key(2))
+    l1, _, _ = lm_apply(params, cfg, rt, toks, rng=jax.random.key(2),
+                        amm_planes=planes)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+# ------------------------------------- noise model <-> bitexact datapath
+@pytest.mark.parametrize("mul,wl,vbl", [("bbm0", 12, 9), ("bbm1", 10, 7)])
+def test_product_error_moments_match_noise_model(mul, wl, vbl):
+    """Empirical per-product BBM error == the injected (mu, sigma).
+
+    The first direct tie between the two amm modes: the moments
+    ``make_noise_model`` injects in mode="noise" must be the moments the
+    mode="bitexact" closed forms actually produce over uniform operands.
+    """
+    spec = MulSpec(mul, wl, vbl)
+    nm = make_noise_model(spec, sample=1 << 18)
+    rng = np.random.default_rng(17)
+    a = jnp.asarray(rng.integers(0, 1 << wl, 1 << 18), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << wl, 1 << 18), jnp.int32)
+    approx = np.asarray(core_mul(spec)(a, b), np.int64)
+    exact = (np.asarray(to_signed(a, wl), np.int64)
+             * np.asarray(to_signed(b, wl), np.int64))
+    err = (approx - exact).astype(np.float64)
+    assert err.mean() == pytest.approx(nm.mean, rel=0.05)
+    assert err.std() == pytest.approx(np.sqrt(nm.var), rel=0.05)
+
+
+# ------------------------------------------- fused Pallas noise fast path
+def test_amm_noise_pallas_noiseless_bitwise():
+    """use_pallas with an exact spec == the plain quantized matmul.
+
+    wl = 8 keeps every partial sum inside float32's exact-integer range,
+    so the kernel's tiled accumulation and the single jnp.dot must agree
+    bitwise, quantization included.
+    """
+    x, w = _operands(m=16, k=32, n=8)
+    y_pl = amm_dense(x, w, _rt("booth", 8, 0, mode="noise", use_pallas=True))
+    y_np = amm_dense(x, w, _rt("booth", 8, 0, mode="noise"))
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_np))
+
+
+def test_amm_noise_pallas_moments():
+    """Fused in-kernel noise carries the calibrated (mu, sigma)."""
+    rt = _rt("bbm0", 12, 9, mode="noise", use_pallas=True)
+    assert rt.sigma > 0
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    base = np.asarray(amm_dense(x, w, _rt("booth", 12, 0, mode="noise",
+                                          use_pallas=True)))
+    # same quantization grid: eps = (noisy - base) / (s_x * s_w)
+    lim = float(2 ** 11 - 1)
+    s_x = float(jnp.max(jnp.abs(x))) / lim
+    s_w = float(jnp.max(jnp.abs(w))) / lim
+    noisy = np.asarray(amm_dense(x, w, rt, key=jax.random.key(0)))
+    eps = (noisy - base) / (s_x * s_w)
+    k = x.shape[-1]
+    assert eps.mean() == pytest.approx(rt.mu * k, rel=0.1)
+    assert eps.std() == pytest.approx(rt.sigma * np.sqrt(k), rel=0.1)
+
+
+def test_amm_noise_pallas_keyed():
+    """Same key -> same draw; different key -> different draw."""
+    x, w = _operands(m=8, k=16, n=8)
+    rt = _rt("bbm0", 12, 9, mode="noise", use_pallas=True)
+    a = np.asarray(amm_dense(x, w, rt, key=jax.random.key(4)))
+    b = np.asarray(amm_dense(x, w, rt, key=jax.random.key(4)))
+    c = np.asarray(amm_dense(x, w, rt, key=jax.random.key(5)))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
