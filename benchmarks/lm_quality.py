@@ -13,12 +13,25 @@ columns:
                    scale since the exact-dot + low-bit-correction rewrite.
 
 so the noise model is validated (or falsified) against the silicon it
-models, at the workload the repo actually cares about.  Derived metrics:
+models, at the workload the repo actually cares about.
+
+Attention-routing cells: since attention's QK^T/PV products run on the
+same datapath (``models.common.amm_dot``; docs/attention.md), the sweep
+also reports ``loss_bitexact`` for ``apply_to`` in {mlp, attn, all} at
+the paper's bbm0/13 operating point — isolating the attention
+contribution to the quality cost from the MLP contribution.
+
+Derived metrics:
 
   lm_bitexact_matches_oracle — 1 iff the dot-form datapath is bitwise
       equal to the retained scalar oracle (``kernels.ref.amm_dense_ref``)
       on this model's own MLP weights; CI gates on it.
+  attn_bitexact_matches_oracle — 1 iff the attention datapath is bitwise
+      equal to the scalar attention oracle
+      (``kernels.ref.amm_attention_ref`` / ``amm_decode_attention_ref``)
+      at this model's own head shapes; CI gates on it too.
   worst_noise_model_gap — max |loss_bitexact - loss_noise| across cells.
+  worst_attn_loss_penalty — max loss penalty across the routing cells.
 
 Used by `benchmarks.run` when --full is set (it costs a few minutes);
 ``python benchmarks/lm_quality.py --smoke`` is the CI gate (short runs,
@@ -49,16 +62,20 @@ from repro.train.trainstep import TrainConfig, init_train_state, \
 
 STEPS = 10
 CELLS = (("bbm0", 13), ("bbm0", 15), ("bbm1", 13))
+# attention-routing cells, all at the paper's bbm0/13 operating point
+ATTN_CELLS = ("mlp", "attn", "all")
 
 
-def _cfg(mode: str, mul: str, vbl: int):
+def _cfg(mode: str, mul: str, vbl: int, apply_to: str = "mlp"):
     cfg = reduced(get_arch("qwen2-0.5b"))
     return dataclasses.replace(
-        cfg, amm=AmmConfig(mode=mode, mul=mul, wl=16, param=vbl))
+        cfg, amm=AmmConfig(mode=mode, mul=mul, wl=16, param=vbl,
+                           apply_to=apply_to))
 
 
-def _run(mode: str, mul: str, vbl: int, steps: int = STEPS) -> float:
-    cfg = _cfg(mode, mul, vbl)
+def _run(mode: str, mul: str, vbl: int, steps: int = STEPS,
+         apply_to: str = "mlp") -> float:
+    cfg = _cfg(mode, mul, vbl, apply_to)
     rt = ModelRuntime.build(cfg)
     mesh = make_host_mesh(1, 1)
     tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=steps))
@@ -135,6 +152,47 @@ def bitexact_matches_oracle() -> bool:
     return bool(ok)
 
 
+def attn_bitexact_matches_oracle() -> bool:
+    """Attention datapath == scalar attention oracle at the LM's shapes.
+
+    Drives ``chunked_attention`` (prefill schedule) and
+    ``decode_attention`` (cache schedule, dead zero tail) at the reduced
+    qwen2's own head geometry — n_heads, n_kv_heads, head_dim — across
+    every sweep cell, so both truncation kinds gate CI.  Equality is
+    bitwise (``kernels.ref`` shares the schedule, oracles the products;
+    docs/attention.md).
+    """
+    from repro.models.attention import chunked_attention, decode_attention
+    from repro.kernels.ref import (amm_attention_ref,
+                                   amm_decode_attention_ref)
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    h, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(19)
+    q = jnp.asarray(rng.standard_normal((2, 16, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 16, kv, d)), jnp.float32)
+    qd = jnp.asarray(rng.standard_normal((2, 1, h, d)), jnp.float32)
+    kc = np.zeros((2, 16, kv, d), np.float32)
+    vc = np.zeros((2, 16, kv, d), np.float32)
+    kc[:, :11] = rng.standard_normal((2, 11, kv, d))
+    vc[:, :11] = rng.standard_normal((2, 11, kv, d))
+    kc, vc = jnp.asarray(kc), jnp.asarray(vc)
+    ok = True
+    for mul, vbl in CELLS:
+        rt = AmmRuntime.build(AmmConfig(mode="bitexact", mul=mul, wl=16,
+                                        param=vbl, apply_to="all"))
+        spec = MulSpec(mul, 16, vbl)
+        got = np.asarray(chunked_attention(q, k, v, causal=True, bq=8,
+                                           bk=8, amm=rt))
+        ref = np.asarray(amm_attention_ref(q, k, v, spec, causal=True,
+                                           bq=8, bk=8))
+        ok = ok and np.array_equal(got, ref)
+        got_d = np.asarray(decode_attention(qd, kc, vc, 11, amm=rt))
+        ref_d = np.asarray(amm_decode_attention_ref(qd, kc, vc, 11, spec))
+        ok = ok and np.array_equal(got_d, ref_d)
+    return bool(ok)
+
+
 def lm_quality(steps: int = STEPS):
     base = _run("off", "bbm0", 0, steps)
     rows = [{"mul": "exact", "vbl": 0, "loss_noise": base,
@@ -147,36 +205,59 @@ def lm_quality(steps: int = STEPS):
             "loss_bitexact": _run("bitexact", mul, vbl, steps),
             "power_saving_pct":
                 100 * (1 - power(MulSpec(mul, 16, vbl)) / p0)})
+    # attention-routing cells: the whole-forward trajectory at bbm0/13.
+    # The "mlp" cell IS the bbm0/13 sweep cell just trained (apply_to
+    # defaults to "mlp" in _run) — reuse its loss instead of re-training.
+    mlp_13 = next(r["loss_bitexact"] for r in rows
+                  if r["mul"] == "bbm0" and r["vbl"] == 13)
+    attn_rows = [{"mul": "bbm0", "vbl": 13, "apply_to": ap,
+                  "loss_bitexact": (mlp_13 if ap == "mlp"
+                                    else _run("bitexact", "bbm0", 13, steps,
+                                              apply_to=ap))}
+                 for ap in ATTN_CELLS]
     worst = max(r["loss_bitexact"] - base for r in rows[1:])
     gap = max(abs(r["loss_bitexact"] - r["loss_noise"]) for r in rows[1:])
-    return rows, {"base_loss": base, "worst_loss_penalty": worst,
-                  "worst_noise_model_gap": gap,
-                  "lm_bitexact_matches_oracle":
-                      int(bitexact_matches_oracle()),
-                  "max_power_saving_pct": max(r["power_saving_pct"]
-                                              for r in rows)}
+    return rows + attn_rows, {
+        "base_loss": base, "worst_loss_penalty": worst,
+        "worst_noise_model_gap": gap,
+        "worst_attn_loss_penalty": max(r["loss_bitexact"] - base
+                                       for r in attn_rows),
+        "lm_bitexact_matches_oracle": int(bitexact_matches_oracle()),
+        "attn_bitexact_matches_oracle": int(attn_bitexact_matches_oracle()),
+        "max_power_saving_pct": max(r["power_saving_pct"] for r in rows)}
 
 
 def smoke() -> int:
-    """CI gate: short bit-exact cell + oracle equality at the LM config.
+    """CI gate: short bit-exact cells + oracle equality at the LM config.
 
-    Exit 1 when the dot-form datapath diverges from the scalar oracle or
-    any loss goes non-finite — the model-scale analogue of the filterbank
-    smoke's kernel_bitexact / dotform_bitexact gates.
+    Exit 1 when the dot-form datapath diverges from the scalar oracle
+    (MLP *or* attention side), or any loss — including the attention
+    routing cells apply_to in {attn, all} — goes non-finite: the
+    model-scale analogue of the filterbank smoke's kernel_bitexact /
+    dotform_bitexact gates.
     """
     match = bitexact_matches_oracle()
+    attn_match = attn_bitexact_matches_oracle()
     base = _run("off", "bbm0", 0, steps=2)
     bit = _run("bitexact", "bbm0", 13, steps=2)
     noise = _run("noise", "bbm0", 13, steps=2)
+    bit_attn = _run("bitexact", "bbm0", 13, steps=2, apply_to="attn")
+    bit_all = _run("bitexact", "bbm0", 13, steps=2, apply_to="all")
     out = {"lm_bitexact_matches_oracle": int(match),
-           "base_loss": base, "loss_bitexact": bit, "loss_noise": noise}
+           "attn_bitexact_matches_oracle": int(attn_match),
+           "base_loss": base, "loss_bitexact": bit, "loss_noise": noise,
+           "loss_bitexact_attn": bit_attn, "loss_bitexact_all": bit_all}
     print(json.dumps(out, sort_keys=True))
-    finite = all(np.isfinite(v) for v in (base, bit, noise))
+    finite = all(np.isfinite(v)
+                 for v in (base, bit, noise, bit_attn, bit_all))
     if not match:
         print("FAIL: dot-form amm_dense != scalar oracle", file=sys.stderr)
+    if not attn_match:
+        print("FAIL: amm attention != scalar attention oracle",
+              file=sys.stderr)
     if not finite:
         print("FAIL: non-finite loss", file=sys.stderr)
-    return 0 if (match and finite) else 1
+    return 0 if (match and attn_match and finite) else 1
 
 
 if __name__ == "__main__":

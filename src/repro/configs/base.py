@@ -26,10 +26,23 @@ class AmmConfig:
     mul: str = "bbm0"          # multiplier family (core.multipliers registry)
     wl: int = 16
     param: int = 13            # VBL (or K for kulkarni)
-    apply_to: str = "mlp"      # "mlp" | "all" — which matmuls are approximated
+    apply_to: str = "mlp"      # which matmul families are approximated:
+                               #   "mlp"  — the gated MLPs (weight-side,
+                               #            plane-cacheable)
+                               #   "attn" — the attention score/value
+                               #            products Q@K^T and P@V
+                               #            (activation x activation;
+                               #            mode="bitexact" Booth families
+                               #            only — docs/attention.md)
+                               #   "all"  — both
     use_pallas: bool = False   # mode="noise": fused quant_matmul Pallas
                                # kernel (quantize->MXU->in-kernel noise->
                                # descale; interpret-mode off TPU)
+
+    def __post_init__(self):
+        if self.apply_to not in ("mlp", "attn", "all"):
+            raise ValueError(f"apply_to must be 'mlp', 'attn' or 'all', "
+                             f"got {self.apply_to!r}")
 
 
 @dataclasses.dataclass(frozen=True)

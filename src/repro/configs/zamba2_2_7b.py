@@ -1,6 +1,7 @@
 """Zamba2-2.7B hybrid: Mamba2 backbone + shared attention block every 6
-layers (weights reused; per-invocation LoRA omitted — see DESIGN.md)
-[arXiv:2411.15242]."""
+layers (weights reused; the per-invocation LoRA deltas of the reference
+implementation are deliberately omitted — the shared-block scheme itself
+is what the hybrid family exercises) [arXiv:2411.15242]."""
 from .base import ArchConfig
 
 CONFIG = ArchConfig(

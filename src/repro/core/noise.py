@@ -11,7 +11,8 @@ This is what makes the technique usable inside 100M..671B-parameter models:
 characterize once (exhaustive/sampled, `errstats.characterize`), then inject
 the calibrated noise around an *exact* MXU matmul.  Bit-exact emulation
 (kernels/bbm_matmul.py) remains available to validate the noise model — see
-tests/test_noise.py which checks injected moments against bit-exact runs.
+tests/test_noise_model.py and tests/test_amm_bitexact.py, which check
+injected moments against bit-exact runs.
 
 Operand-scale correction: the characterized (mu, sigma) assume uniform
 wl-bit operands.  Truncation error of row i is ~ d_i*A mod 2^m, whose moments

@@ -4,7 +4,7 @@ These literally build the partial-product dot diagram of each multiplier —
 row by row, bit by bit, with hardware sign-extension semantics — apply the
 breaking/nullification to individual dots, and sum columns.  They are the
 oracles the closed-form JAX implementations are tested against
-(tests/test_bbm.py, test_bam_kulkarni.py), and double as the big-int path for
+(tests/test_core_multipliers.py), and double as the big-int path for
 unsigned word lengths whose products overflow int32.
 
 Slow and scalar on purpose.

@@ -84,9 +84,10 @@ def design_lowpass(num_taps: int = NUM_TAPS,
 
     The paper does not state its remez error weighting; ``stop_weight`` is
     calibrated once so the double-precision testbed reproduces the paper's
-    reported SNR_out of 25.7 dB (see EXPERIMENTS.md — with equal weights the
-    same 31-tap design gives 30.1 dB, i.e. our testbed is, if anything,
-    conservative about the paper's headline numbers).
+    reported SNR_out of 25.7 dB (docs/filterbank.md §Testbed calibration —
+    with equal weights the same 31-tap design gives 30.1 dB, i.e. our
+    testbed is, if anything, conservative about the paper's headline
+    numbers).
     """
     h = remez(num_taps, [0.0, PASS_EDGE, STOP_EDGE, 0.5], [1.0, 0.0],
               weight=[1.0, stop_weight])
@@ -299,8 +300,8 @@ def fir_apply(x: np.ndarray, h, spec: MulSpec | None = None, *,
                        wl-bit-adder datapath.  This is what produces the
                        paper's Fig. 8(a) cliff at small word lengths; with a
                        full-precision accumulator the word length barely
-                       matters down to WL=8 (documented in EXPERIMENTS.md).
-                       Host backend only.
+                       matters down to WL=8 (docs/filterbank.md §Testbed
+                       calibration).  Host backend only.
 
     shift — per-product arithmetic right shift before accumulation (the MAC
     rescale).  ``None`` selects 0 when the int32 envelope allows it and the

@@ -1,5 +1,5 @@
 """Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
-from .bbm_matmul import bbm_matmul_scaled
+from .bbm_matmul import bbm_matmul_dynamic, bbm_matmul_scaled
 from .booth_rows import (amm_chunk_len, bbm_rows_product_dotform,
                          booth_correction, booth_high_value, booth_precode,
                          booth_value, dotform_scaled_bound, resolve_form)
@@ -9,7 +9,8 @@ from .ops import (bbm_matmul, bbm_matmul_precoded, fir_filterbank,
                   fir_filterbank_precoded, flash_attention, on_tpu,
                   quant_matmul)
 
-__all__ = ["amm_chunk_len", "bbm_matmul", "bbm_matmul_precoded",
+__all__ = ["amm_chunk_len", "bbm_matmul", "bbm_matmul_dynamic",
+           "bbm_matmul_precoded",
            "bbm_matmul_scaled", "bbm_rows_product_dotform",
            "booth_correction", "booth_high_value", "booth_precode",
            "booth_value", "dotform_scaled_bound", "fir_bbm", "fir_bbm_bank",

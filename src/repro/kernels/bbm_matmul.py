@@ -57,9 +57,10 @@ from .booth_rows import (amm_chunk_len, bbm_rows_product_precoded,
                          booth_high_value, booth_precode, num_corr_rows,
                          resolve_form, scaled_trunc_rows, signed_digit,
                          split_signed)
+from .ref import amm_quantize
 
-__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_precoded",
-           "bbm_matmul_scaled"]
+__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_dynamic",
+           "bbm_matmul_precoded", "bbm_matmul_scaled"]
 
 # auto-form only: above this many int32 elements the shift > vbl residual
 # branch's (M, K, N) per-product temporary stops being a fair trade against
@@ -204,6 +205,42 @@ def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
     acc, _ = jax.lax.scan(body, jnp.zeros((mm, nn), jnp.float32),
                           (xc, wmc, wnc))
     return acc * scale
+
+
+def bbm_matmul_dynamic(a, b, *, wl: int, vbl: int, kind: int = 0):
+    """Both-operands-dynamic Broken-Booth matmul — the attention entry point.
+
+    ``bbm_matmul_scaled`` contracts quantized codes against a *precoded*
+    multiplier operand: the weight-side calling convention, where the
+    dynamic scale and radix-4 digit planes are derived once per parameter
+    and cached (``AmmRuntime.precode``).  Attention has no weight side —
+    the score product ``Q @ K^T`` and the value product ``P @ V`` multiply
+    activations by activations, and both operands change every call — so
+    this wrapper quantizes *both* sides per call (``ref.amm_quantize``
+    dynamic-range scales, derived from this (M, K) / (K, N) slice alone:
+    vmapping over batch/head axes yields per-slice scales), decodes ``b``'s
+    digit planes inline, contracts through the same chunked
+    digit-dot-minus-residue-dot correction (K chunked by
+    ``booth_rows.amm_chunk_len`` so every intermediate stays int32-exact
+    per chunk), and descales.
+
+    a: (M, K) float, b: (K, N) float.  Returns (M, N) in ``a.dtype``,
+    bit-identical to the scalar closed-form oracle ``ref.amm_dot_ref``
+    (same quantizer, same chunk schedule, same descale expression).
+
+    Deliberately not jitted as a unit (only the ``bbm_matmul_scaled``
+    core is): XLA's fusion can round ``amm_quantize``'s dynamic-scale
+    division differently inside a larger compiled program than op-by-op,
+    so the bitwise dot-vs-oracle contract holds *per compilation
+    context* — both sides of a comparison must be traced the same way,
+    which the shared attention schedule guarantees and an extra jit
+    boundary here would break.
+    """
+    aq, s_a = amm_quantize(a, wl)
+    bq, s_b = amm_quantize(b, wl)
+    mag, neg = booth_precode(bq, wl)
+    yq = bbm_matmul_scaled(aq, mag, neg, wl=wl, vbl=vbl, kind=kind)
+    return (yq * (s_a * s_b)).astype(a.dtype)
 
 
 def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,

@@ -13,7 +13,16 @@ grid static).
 Validated against ref.attention_ref in interpret mode over shape/dtype sweeps
 (tests/test_kernels.py).  The multi-pod dry-run deliberately lowers the pure
 JAX path instead (Pallas kernels do not lower to the CPU backend used for the
-512-device compile check) — selected by ModelConfig.use_pallas_attention.
+512-device compile check) — selected by ModelRuntime.use_pallas_attention.
+
+Approximate attention: this kernel has NO amm lowering — its score and
+value products are exact f32 dots fused with the online softmax, and the
+Broken-Booth product cannot be grafted in without rewriting the tile
+arithmetic around integer codes.  When ``AmmConfig.apply_to`` routes
+attention through the approximate datapath, ``models.attention.attention``
+falls back to the pure-JAX chunked path (whose per-block products are the
+amm hook points) regardless of ``use_pallas`` — the fallback rules and the
+envelope argument live in docs/attention.md.
 """
 from __future__ import annotations
 

@@ -8,7 +8,8 @@ from ..core.bbm import bbm_type0, bbm_type1
 from ..core.multipliers import MulSpec, mul as core_mul
 from .booth_rows import amm_chunk_len
 
-__all__ = ["amm_approx_ref", "amm_dense_ref", "amm_quantize",
+__all__ = ["amm_approx_ref", "amm_attention_ref", "amm_decode_attention_ref",
+           "amm_dense_ref", "amm_dot_ref", "amm_quantize",
            "bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
            "attention_ref"]
 
@@ -102,6 +103,73 @@ def amm_dense_ref(x, w, spec: MulSpec):
     """
     exact = x @ w
     return exact + (amm_approx_ref(x, w, spec) - exact)
+
+
+def amm_dot_ref(a, b, spec: MulSpec):
+    """Scalar oracle of ``bbm_matmul.bbm_matmul_dynamic``, batched.
+
+    The both-operands-dynamic product (attention scores/PV) has no weight
+    side, so its oracle is ``amm_approx_ref`` — which already quantizes
+    *both* operands per call — vmapped over the shared leading batch axes:
+    each (M, K) x (K, N) slice gets its own pair of dynamic scales,
+    exactly the granularity the dot-form datapath derives under the same
+    vmap.  a: (..., M, K), b: (..., K, N) with matching leading axes.
+    """
+    if a.ndim != b.ndim:
+        raise ValueError(f"operand ranks differ: {a.shape} vs {b.shape}")
+    fn = lambda aa, bb: amm_approx_ref(aa, bb, spec)
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)
+
+
+def amm_attention_ref(q, k, v, spec: MulSpec, *, causal: bool = True,
+                      q_offset=0, bq: int = 512, bk: int = 1024,
+                      kv_len=None):
+    """Scalar attention oracle for the approximate-attention datapath.
+
+    Runs the *same* chunked online-softmax schedule as
+    ``models.attention.chunked_attention`` — blocking, masking, max/
+    denominator renormalization, float op order — with every score and
+    value product formed through the scalar closed forms
+    (``amm_dot_ref`` -> ``core.multipliers``) instead of the dot-form
+    contraction.  Sharing the schedule is deliberate and mirrors the
+    ``amm_dense_ref`` contract: the multiplier *datapath* is what is
+    oracled, and one source of truth for the schedule is what makes
+    dot-vs-oracle equality ``assert_array_equal`` instead of allclose.
+
+    q: (B, Sq, H, D), k/v: (B, Skv, KV, D); same signature semantics as
+    ``chunked_attention``.  Lazy import: models sits above kernels in the
+    layering, so the oracle pulls the schedule in at call time.
+    """
+    from ..models.attention import chunked_attention
+    rt = _attn_runtime(spec)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             bq=bq, bk=bk, kv_len=kv_len, amm=rt,
+                             amm_oracle=True)
+
+
+def amm_decode_attention_ref(q, k_cache, v_cache, kv_len, spec: MulSpec):
+    """Scalar oracle of single-position amm attention against a cache.
+
+    Mirrors ``models.attention.decode_attention`` the same way
+    ``amm_attention_ref`` mirrors the chunked path: shared schedule,
+    scalar closed-form products.
+    """
+    from ..models.attention import decode_attention
+    rt = _attn_runtime(spec)
+    return decode_attention(q, k_cache, v_cache, kv_len, amm=rt,
+                            amm_oracle=True)
+
+
+def _attn_runtime(spec: MulSpec):
+    """AmmRuntime carrying ``spec`` with attention routing enabled."""
+    from ..configs.base import AmmConfig
+    from ..models.common import AmmRuntime
+    if spec.name not in AMM_BOOTH_KINDS:
+        raise ValueError(f"no attention lowering for family {spec.name!r}")
+    return AmmRuntime(AmmConfig(mode="bitexact", mul=spec.name, wl=spec.wl,
+                                param=spec.param, apply_to="all"))
 
 
 def bbm_matmul_ref(x, w, *, wl: int, vbl: int, kind: int = 0,

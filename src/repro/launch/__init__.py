@@ -1,1 +1,43 @@
-"""Subsystem package."""
+"""Subsystem package: CLI entry points + shared argparse plumbing."""
+from __future__ import annotations
+
+__all__ = ["add_amm_attn_arg", "resolve_amm_apply_to"]
+
+
+def add_amm_attn_arg(ap) -> None:
+    """The shared ``--amm-attn`` flag (train and serve launchers).
+
+    Bare flag -> apply_to="all" (MLPs + attention); ``--amm-attn attn``
+    -> attention only.  Attention routing engages only for
+    mode="bitexact" with a Booth-family mul — under mode="noise" the
+    MLPs still route but attention stays exact (docs/attention.md);
+    ``resolve_amm_apply_to`` rejects the combinations that would
+    approximate nothing at all.
+    """
+    ap.add_argument("--amm-attn", nargs="?", const="all", default=None,
+                    choices=["attn", "all"],
+                    help="route the attention QK^T/PV products through the "
+                         "approximate datapath too (bare flag: MLPs + "
+                         "attention, apply_to='all'; '--amm-attn attn': "
+                         "attention only).  Attention routing needs "
+                         "--amm bitexact with a Booth-family --mul; under "
+                         "--amm noise the MLPs still route but attention "
+                         "stays exact (docs/attention.md)")
+
+
+def resolve_amm_apply_to(ap, args) -> str:
+    """Validate the (--amm, --mul, --amm-attn) combination -> apply_to.
+
+    apply_to="attn" excludes the MLPs and only the bitexact Booth
+    datapath has an attention lowering (``kernels.ref.AMM_BOOTH_KINDS``,
+    the same registry ``AmmRuntime.attn_active`` consults), so any other
+    combination would silently compute the whole model exactly while
+    labeled amm — reject it at the CLI instead.
+    """
+    from ..kernels.ref import AMM_BOOTH_KINDS
+    if args.amm_attn == "attn" and not (
+            args.amm == "bitexact" and args.mul in AMM_BOOTH_KINDS):
+        ap.error("--amm-attn attn routes *only* attention, which needs "
+                 "--amm bitexact with a Booth-family --mul; this "
+                 "combination would approximate nothing")
+    return args.amm_attn or "mlp"

@@ -245,7 +245,8 @@ def append_result(res: Dict[str, Any], path: str):
 def eligible(arch: str, shape_name: str) -> bool:
     cfg = get_arch(arch)
     if shape_name == "long_500k" and not cfg.sub_quadratic:
-        return False        # full-attention archs skip 500k (see DESIGN.md)
+        return False        # full-attention archs skip 500k: quadratic
+                            # score memory is out of budget at that length
     return True
 
 

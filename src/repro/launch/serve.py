@@ -6,7 +6,10 @@
 --amm bitexact serves through the true Broken-Booth datapath (dot-form
 lowering); the Scheduler precodes every approximated weight's digit planes
 once at construction, so the per-step cost is the contraction, not the
-decode.
+decode.  --amm-attn widens the routing to the attention score/value
+products (``--amm-attn`` alone = apply_to="all", ``--amm-attn attn`` =
+attention only); those are activation x activation, so they quantize per
+step — there are no weight planes to cache for them.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from ..configs import ARCH_NAMES, get_arch, reduced
 from ..configs.base import AmmConfig
 from ..models import ModelRuntime, lm_init
 from ..serve.engine import Request, Scheduler, make_serve_fns
+from . import add_amm_attn_arg, resolve_amm_apply_to
 from .mesh import make_host_mesh
 
 
@@ -39,14 +43,17 @@ def main(argv=None):
     ap.add_argument("--vbl", type=int, default=13)
     ap.add_argument("--amm-pallas", action="store_true",
                     help="mode=noise: fused Pallas quant_matmul kernel")
+    add_amm_attn_arg(ap)
     args = ap.parse_args(argv)
+    apply_to = resolve_amm_apply_to(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     cfg = dataclasses.replace(
         cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
-                           param=args.vbl, use_pallas=args.amm_pallas))
+                           param=args.vbl, use_pallas=args.amm_pallas,
+                           apply_to=apply_to))
     rt = ModelRuntime.build(cfg)
     params = lm_init(cfg, jax.random.key(0))
     # jitted decode step with the digit-plane cache baked into the closure:

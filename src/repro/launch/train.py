@@ -23,6 +23,7 @@ from ..parallel.logical import tree_shardings
 from ..train.loop import LoopConfig, train_loop
 from ..train.optimizer import OptConfig
 from ..train.trainstep import TrainConfig, make_train_step, init_train_state
+from . import add_amm_attn_arg, resolve_amm_apply_to
 from .mesh import make_host_mesh
 
 
@@ -47,16 +48,19 @@ def main(argv=None):
                          "quant_matmul kernel (TPU fast path; interpreted "
                          "on CPU).  mode=bitexact needs no flag — it "
                          "always lowers to the dot-form contractions.")
+    add_amm_attn_arg(ap)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     args = ap.parse_args(argv)
+    apply_to = resolve_amm_apply_to(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     cfg = dataclasses.replace(
         cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
-                           param=args.vbl, use_pallas=args.amm_pallas))
+                           param=args.vbl, use_pallas=args.amm_pallas,
+                           apply_to=apply_to))
     rt = ModelRuntime.build(cfg)
     mesh = make_host_mesh(args.mesh_data, args.mesh_model)
     tc = TrainConfig(microbatches=args.microbatches,

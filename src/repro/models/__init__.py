@@ -1,9 +1,9 @@
 """Model zoo: composable LM families with the paper's approximate-matmul
 technique as a first-class layer."""
-from .common import AmmRuntime, cross_entropy_loss
+from .common import AmmRuntime, amm_dot, cross_entropy_loss
 from .transformer import (ModelRuntime, init_cache, lm_amm_planes, lm_apply,
                           lm_init, lm_logical_axes, lm_loss, lm_table)
 
-__all__ = ["AmmRuntime", "cross_entropy_loss", "ModelRuntime", "init_cache",
-           "lm_amm_planes", "lm_apply", "lm_init", "lm_logical_axes",
-           "lm_loss", "lm_table"]
+__all__ = ["AmmRuntime", "amm_dot", "cross_entropy_loss", "ModelRuntime",
+           "init_cache", "lm_amm_planes", "lm_apply", "lm_init",
+           "lm_logical_axes", "lm_loss", "lm_table"]

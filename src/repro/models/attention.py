@@ -6,6 +6,17 @@ lowers on any backend — it is what the 512-device dry-run compiles.  On TPU
 the Pallas flash kernel (kernels/flash_attention.py) is selected via
 ``use_pallas`` (numerics validated equal in tests).
 
+Approximate attention (``amm=``): the score product ``Q @ K^T`` and the
+value product ``P @ V`` can route through the bit-exact Broken-Booth
+dot-form datapath (``models.common.amm_dot`` on
+``kernels.bbm_matmul_dynamic``) — the activation x activation counterpart
+of the MLPs' ``amm_dense``.  Both products are formed *per KV block*, each
+block's integer accumulation completing before any online-softmax
+renormalization touches its result, so the softmax algebra composes
+unchanged (docs/attention.md carries the envelope argument).  The Pallas
+flash kernel has no amm lowering; when amm is active the wrappers fall
+back to this pure-JAX chunked path.
+
 KV caches are ``(batch, seq, kv_heads, head_dim)`` per tensor (MLA caches the
 compressed latent ``(batch, seq, kv_latent+rope)``), updated with
 ``dynamic_update_slice`` at the decode position.
@@ -19,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .common import Spec, apply_rope, rmsnorm
+from .common import Spec, amm_dot, apply_rope, rmsnorm
 
 __all__ = ["attn_table", "mla_table", "attention", "mla_attention",
            "chunked_attention", "decode_attention"]
@@ -79,7 +90,8 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
                       bq: int = 512, bk: int = 1024, kv_len=None,
                       remat_qblock: bool = False,
                       causal_skip: bool = False,
-                      p_bf16: bool = False):
+                      p_bf16: bool = False,
+                      amm=None, amm_oracle: bool = False):
     """Online-softmax blockwise attention, pure JAX.
 
     q: (B, Sq, H, D), k/v: (B, Skv, KV, D) with H a multiple of KV (GQA).
@@ -87,12 +99,20 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
     kv_len: number of valid kv positions (<= Skv), static or traced.
     remat_qblock: checkpoint each q-block so the backward pass recomputes
       the (bq x bk) score blocks instead of saving them through the KV scan
-      (flash-attention-style backward; see EXPERIMENTS.md §Perf — the saved
-      score residuals are the dominant memory term of the baseline).
+      (flash-attention-style backward; see docs/perf.md §Model-side perf
+      levers — the saved score residuals are the dominant memory term of
+      the baseline).
     causal_skip: unroll the q-block loop in python so each q block scans
       only its own past KV blocks — halves attention FLOPs and score
       traffic vs. the masked full grid.  Needs causal, static q_offset == 0
       and modest nq (HLO grows linearly in nq); falls back otherwise.
+    amm: optional ``AmmRuntime`` — form the per-block score and value
+      products through the approximate datapath (``common.amm_dot``; the
+      caller gates on ``AmmRuntime.attn_active``).  ``p_bf16`` is ignored
+      on that path: the amm product owns its own quantization.
+    amm_oracle: with ``amm``, form the products through the scalar closed
+      forms instead of the dot-form contraction — the hook
+      ``kernels.ref.amm_attention_ref`` uses to oracle this schedule.
     Returns (B, Sq, H, D).
     """
     b, sq, h, d = q.shape
@@ -124,8 +144,14 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
         def kv_block(carry, inp):
             ki, k_j, v_j = inp
             m, l, acc = carry
-            s = jnp.einsum("bgqd,bgkd->bgqk", qg,
-                           k_j.astype(jnp.float32))         # (B,KV,g*bq,bk)
+            if amm is not None:
+                # the Broken-Booth score product: one both-sides-dynamic
+                # approximate matmul per (batch, kv-head) slice
+                s = amm_dot(qg, k_j.astype(jnp.float32).swapaxes(-1, -2),
+                            amm, oracle=amm_oracle)          # (B,KV,g*bq,bk)
+            else:
+                s = jnp.einsum("bgqd,bgkd->bgqk", qg,
+                               k_j.astype(jnp.float32))     # (B,KV,g*bq,bk)
             s4 = s.reshape(b, kvh, groups, bq, bk)
             qpos = q_offset + qi * bq + jnp.arange(bq)
             kpos = ki * bk + jnp.arange(bk)
@@ -138,9 +164,16 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
             p = jnp.exp(s - m_new)
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + p.sum(axis=-1, keepdims=True)
-            if p_bf16:
+            if amm is not None:
+                # the Broken-Booth value product; p's block rows are the
+                # finished (un-normalized) probabilities, quantized per
+                # (batch, kv-head) slice like the scores
+                pv = amm_dot(p, v_j.astype(jnp.float32), amm,
+                             oracle=amm_oracle)
+            elif p_bf16:
                 # halve the probability-block HBM traffic; the f32 psum of
-                # l_new keeps the normalizer exact (it-F in §Perf)
+                # l_new keeps the normalizer exact (docs/perf.md
+                # §Model-side perf levers)
                 pv = jnp.einsum("bgqk,bgkd->bgqd", p.astype(jnp.bfloat16),
                                 v_j.astype(jnp.bfloat16),
                                 preferred_element_type=jnp.float32)
@@ -178,21 +211,35 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
     return out[:, :sq].astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, kv_len):
+def decode_attention(q, k_cache, v_cache, kv_len, *, amm=None,
+                     amm_oracle: bool = False):
     """Single-position attention against a cache.
 
     q: (B, 1, H, D); caches: (B, S, KV, D); kv_len: valid length (traced).
+    amm/amm_oracle: as in ``chunked_attention``.  The decode products are
+    quantized per (batch, kv-head) over the *whole* cache slice — dead
+    positions past ``kv_len`` are zeros (``init_cache``), so they never
+    move the dynamic-range scale, and their score columns are masked to
+    NEG_INF after the product exactly as on the exact path.
     """
     b, _, h, d = q.shape
     _, s, kvh, _ = k_cache.shape
     dv = v_cache.shape[-1]
     groups = h // kvh
     qf = q.astype(jnp.float32).reshape(b, kvh, groups, d) / (d ** 0.5)
-    sc = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    if amm is not None:
+        sc = amm_dot(qf, k_cache.astype(jnp.float32).transpose(0, 2, 3, 1),
+                     amm, oracle=amm_oracle)                # (B,KV,g,S)
+    else:
+        sc = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
     live = jnp.arange(s)[None, None, None, :] < kv_len
     sc = jnp.where(live, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    if amm is not None:
+        out = amm_dot(p, v_cache.astype(jnp.float32).transpose(0, 2, 1, 3),
+                      amm, oracle=amm_oracle)               # (B,KV,g,Dv)
+    else:
+        out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, dv).astype(q.dtype)
 
 
@@ -205,12 +252,17 @@ class KVUpdate(NamedTuple):
 def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
               causal: bool = True, kv=None, use_pallas: bool = False,
               remat_qblock: bool = False, shard_heads: bool = False,
-              causal_skip: bool = False, p_bf16: bool = False):
+              causal_skip: bool = False, p_bf16: bool = False, amm=None):
     """GQA attention.  x: (B, S, d_model).
 
     cache: optional dict {"k","v"} (B, S_max, KV, D) for decode; ``pos`` is
     the current decode position (traced scalar).  kv: optional externally
-    provided (k, v) (cross-attention).  Returns (out, new_cache).
+    provided (k, v) (cross-attention).  amm: optional ``AmmRuntime`` — the
+    score/value products go through the approximate datapath (the Q/K/V/O
+    projections stay exact; docs/attention.md).  The Pallas flash kernel
+    has no amm lowering, so ``use_pallas`` is honored only when ``amm`` is
+    None — amm-routed calls take the chunked path, whose per-block
+    products are where the datapath hooks in.  Returns (out, new_cache).
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -240,7 +292,7 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
             cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         new_cache = {"k": ck, "v": cv}
         if s == 1:
-            out = decode_attention(q, ck, cv, kv_len=pos + s)
+            out = decode_attention(q, ck, cv, kv_len=pos + s, amm=amm)
         else:  # multi-token prefill against the cache
             kk, vv = ck, cv
             if shard_heads and ck.shape[2] < q.shape[2]:
@@ -254,8 +306,8 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
                 vv = _maybe_constrain(vv, None, None, "model", None)
             out = chunked_attention(q, kk, vv, causal=causal, q_offset=pos,
                                     kv_len=pos + s,
-                                    remat_qblock=remat_qblock)
-    elif use_pallas and s <= 32768:
+                                    remat_qblock=remat_qblock, amm=amm)
+    elif use_pallas and amm is None and s <= 32768:
         from ..kernels import flash_attention
         groups = q.shape[2] // k.shape[2]
         kk = jnp.repeat(k, groups, axis=2)
@@ -270,7 +322,7 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
             # per device.  Repeating KV to the full head count lets GSPMD
             # shard the n_heads axis (padding if not divisible) — 16x less
             # attention compute/memory per chip at the price of kv
-            # duplication (EXPERIMENTS.md §Perf).
+            # duplication (docs/perf.md §Model-side perf levers).
             groups = q.shape[2] // k.shape[2]
             k = jnp.repeat(k, groups, axis=2)
             v = jnp.repeat(v, groups, axis=2)
@@ -279,7 +331,8 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
             v = _maybe_constrain(v, None, None, "model", None)
         out = chunked_attention(q, k, v, causal=causal,
                                 remat_qblock=remat_qblock,
-                                causal_skip=causal_skip, p_bf16=p_bf16)
+                                causal_skip=causal_skip, p_bf16=p_bf16,
+                                amm=amm)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, new_cache
 
@@ -287,13 +340,16 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
 # ------------------------------------------------------------ MLA attention
 def mla_attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
                   remat_qblock: bool = False, shard_heads: bool = False,
-                  causal_skip: bool = False, p_bf16: bool = False):
+                  causal_skip: bool = False, p_bf16: bool = False,
+                  amm=None):
     """DeepSeek-V3 multi-head latent attention.
 
     The cache stores the compressed latent (B, S, kv_lora + rope_dim); K/V
     are re-expanded per use (the "naive" formulation — the absorbed-matmul
-    decode optimization is a §Perf item, not a correctness one).
-    Returns (out, new_cache).
+    decode optimization is a perf item, not a correctness one).  amm: as
+    in ``attention`` — the score/value products over the re-expanded K/V
+    route through the approximate datapath; the low-rank projections stay
+    exact.  Returns (out, new_cache).
     """
     b, s, _ = x.shape
     nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -338,14 +394,16 @@ def mla_attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
         k_full = _maybe_constrain(k_full, None, None, "model", None)
         v_all = _maybe_constrain(v_all, None, None, "model", None)
     if cache is not None and s == 1:
-        out = decode_attention(q_full, k_full, v_all, kv_len=kv_len)
+        out = decode_attention(q_full, k_full, v_all, kv_len=kv_len,
+                               amm=amm)
     elif cache is not None:
         out = chunked_attention(q_full, k_full, v_all, causal=True,
                                 q_offset=pos, kv_len=kv_len,
-                                remat_qblock=remat_qblock)
+                                remat_qblock=remat_qblock, amm=amm)
     else:
         out = chunked_attention(q_full, k_full, v_all, causal=True,
                                 remat_qblock=remat_qblock,
-                                causal_skip=causal_skip, p_bf16=p_bf16)
+                                causal_skip=causal_skip, p_bf16=p_bf16,
+                                amm=amm)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return y, new_cache

@@ -23,13 +23,13 @@ import numpy as np
 from ..configs.base import AmmConfig
 from ..core.multipliers import MulSpec
 from ..core.noise import make_noise_model
-from ..kernels.bbm_matmul import bbm_matmul_scaled
+from ..kernels.bbm_matmul import bbm_matmul_dynamic, bbm_matmul_scaled
 from ..kernels.booth_rows import booth_precode
 from ..kernels.ref import (AMM_BOOTH_KINDS, amm_approx_ref,
                            amm_effective_vbl, amm_quantize)
 
 __all__ = ["Spec", "init_params", "param_logical_axes", "rmsnorm",
-           "rope_freqs", "apply_rope", "amm_dense", "AmmRuntime",
+           "rope_freqs", "apply_rope", "amm_dense", "amm_dot", "AmmRuntime",
            "cross_entropy_loss"]
 
 
@@ -120,6 +120,33 @@ class AmmRuntime:
         """Does mode="bitexact" run the precodable dot-form datapath?"""
         return (self.cfg.mode == "bitexact"
                 and self.cfg.mul in AMM_BOOTH_KINDS)
+
+    @property
+    def mlp_active(self) -> bool:
+        """Do the model's MLP (weight-side) matmuls route through amm?
+
+        ``apply_to`` is the model-level router: "mlp" and "all" cover the
+        gated MLPs (every mode), "attn" leaves them exact so the attention
+        contribution can be measured in isolation.
+        """
+        return (self.cfg.mode != "off"
+                and self.cfg.apply_to in ("mlp", "all"))
+
+    @property
+    def attn_active(self) -> bool:
+        """Do the attention score/value products route through amm?
+
+        ``Q @ K^T`` and ``P @ V`` multiply activations by activations —
+        there is no weight side, so only the bitexact Booth-family
+        datapath has a lowering for them (``amm_dot`` on
+        ``kernels.bbm_matmul_dynamic``).  mode="noise" keeps attention
+        exact even under apply_to="all": its moments are calibrated for
+        the per-matmul quantize-then-perturb pipeline and have not been
+        characterized for softmax-coupled products (docs/attention.md).
+        """
+        return (self.cfg.mode == "bitexact"
+                and self.cfg.mul in AMM_BOOTH_KINDS
+                and self.cfg.apply_to in ("attn", "all"))
 
     def precode(self, w):
         """Per-parameter digit-plane cache entry for one (K, N) weight.
@@ -227,6 +254,47 @@ def amm_dense(x, w, rt: AmmRuntime, key=None, planes=None):
         approx = _amm_bitexact_approx(x, w, rt, planes=planes)
         return exact + jax.lax.stop_gradient(approx - exact)
     raise ValueError(f"unknown amm mode {cfg.mode!r}")
+
+
+def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False):
+    """Both-operands-dynamic approximate matmul — the attention-side
+    ``amm_dense``.
+
+    Contracts the trailing axis of ``a`` against the second-to-last axis
+    of ``b``, batched over their (matching) leading axes: the shape of the
+    attention score product ``Q @ K^T`` and value product ``P @ V``.
+    Neither operand is a parameter, so there is nothing to precode or
+    cache — both sides are quantized per call, and the vmap over the
+    leading (batch, head) axes gives every slice its own pair of dynamic
+    scales (per-block quantization; docs/attention.md).
+
+    Straight-through like ``amm_dense``: gradients flow through the exact
+    batched matmul, the forward value carries the Broken-Booth error.
+    Only the bitexact Booth-family datapath has a lowering here; callers
+    gate on ``AmmRuntime.attn_active`` (the guard below is defensive and
+    returns the exact product).
+
+    oracle=True forms every product through the scalar closed forms
+    (``kernels.ref.amm_dot_ref``) instead of the dot-form contraction —
+    bit-identical by the amm contract.  ``kernels.ref.amm_attention_ref``
+    uses it to oracle the attention datapath while sharing the softmax
+    schedule.
+    """
+    exact = a @ b
+    cfg = rt.cfg
+    kind = AMM_BOOTH_KINDS.get(cfg.mul)
+    if cfg.mode != "bitexact" or kind is None:
+        return exact
+    if oracle:
+        from ..kernels.ref import amm_dot_ref
+        approx = amm_dot_ref(a, b, rt.spec)
+    else:
+        vbl = amm_effective_vbl(rt.spec)
+        fn = partial(bbm_matmul_dynamic, wl=cfg.wl, vbl=vbl, kind=kind)
+        for _ in range(a.ndim - 2):
+            fn = jax.vmap(fn)
+        approx = fn(a, b)
+    return exact + jax.lax.stop_gradient(approx - exact)
 
 
 # ------------------------------------------------------------------- loss

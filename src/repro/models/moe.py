@@ -37,9 +37,11 @@ def mlp_table(d_model: int, d_ff: int, prefix_axes=("embed", "mlp")) -> Dict:
 def mlp_apply(p, x, amm=None, key=None, planes=None):
     """Gated MLP; ``planes`` is the optional per-weight digit-plane cache
     (``{"w_gate": .., "w_up": .., "w_down": ..}`` of ``AmmRuntime.precode``
-    entries) for the bitexact approximate-matmul datapath."""
+    entries) for the bitexact approximate-matmul datapath.  Routing
+    follows ``AmmRuntime.mlp_active``: apply_to="attn" leaves the MLPs
+    exact so the attention contribution is measurable in isolation."""
     from .common import amm_dense
-    if amm is not None and amm.cfg.mode != "off":
+    if amm is not None and amm.mlp_active:
         pl_ = planes or {}
         g = amm_dense(x, p["w_gate"], amm, key, planes=pl_.get("w_gate"))
         u = amm_dense(x, p["w_up"], amm, key, planes=pl_.get("w_up"))
@@ -107,8 +109,9 @@ def moe_apply(p, x, cfg: ArchConfig, *, capacity_factor: float = 1.25,
     before the expert einsums.  Under FSDP rules the weights' d axis is
     sharded over "data", and GSPMD resolves the contraction by ALL-REDUCING
     the (E, C, d_ff) partial products — tens of GB of f32 per layer (the
-    dominant collective term of the MoE baselines, EXPERIMENTS.md §Perf
-    it-D).  Gathering the weights instead moves ~30x fewer bytes.
+    dominant collective term of the MoE baselines, docs/perf.md
+    §Model-side perf levers).  Gathering the weights instead moves ~30x
+    fewer bytes.
     """
     b, s, d = x.shape
     t = b * s

@@ -40,7 +40,8 @@ class ModelRuntime:
     """Static knobs threaded through apply (jit-static).
 
     attn_remat / shard_heads are the beyond-paper perf levers recorded in
-    EXPERIMENTS.md §Perf (defaults keep the paper-faithful baseline).
+    docs/perf.md §Model-side perf levers (defaults keep the paper-faithful
+    baseline).
     """
     amm: AmmRuntime
     remat: bool = False
@@ -173,9 +174,13 @@ def lm_amm_planes(cfg: ArchConfig, amm: AmmRuntime, params):
     entries keep the layers axis leading so ``jax.lax.scan`` slices them
     exactly like the parameters.  Returns None when nothing is cacheable
     (mode != "bitexact", non-Booth family, SSM-only or encoder-decoder
-    configs — the latter fall back to per-call precode inside the layer).
+    configs — the latter fall back to per-call precode inside the layer)
+    or when no weight-side matmul routes through amm at all
+    (apply_to="attn": ``mlp_apply`` would never read the planes, so
+    building them would be dead startup work held for the process
+    lifetime).
     """
-    if not amm.cacheable:
+    if not (amm.cacheable and amm.mlp_active):
         return None
     stacked = jax.vmap(amm.precode)           # (L, K, N) -> per-layer cache
 
@@ -250,8 +255,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 # ------------------------------------------------------------------ blocks
 def _attn_block(p, h, cfg, rt, *, positions, cache=None, pos=None, kv=None):
     fn = mla_attention if cfg.use_mla else attention
+    # apply_to routing: "attn"/"all" (bitexact Booth family) sends the
+    # score/value products through the approximate datapath; "mlp" keeps
+    # attention exact — bit-identical to the pre-routing code path
     kw = {"remat_qblock": rt.attn_remat, "shard_heads": rt.shard_heads,
-          "causal_skip": rt.causal_skip, "p_bf16": rt.attn_p_bf16}
+          "causal_skip": rt.causal_skip, "p_bf16": rt.attn_p_bf16,
+          "amm": rt.amm if rt.amm.attn_active else None}
     if not cfg.use_mla:
         kw.update(use_pallas=rt.use_pallas_attention, kv=kv)
     y, new_cache = fn(p["attn"], rmsnorm(h, p["attn_norm"], cfg.norm_eps),
@@ -362,12 +371,16 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
                           if cache_l is not None else None)
             hh, new_self = _attn_block(p_l, hh, cfg, rt, positions=positions,
                                        cache=cache_self, pos=pos)
-            # cross attention: keys/values from encoder output or cache
+            # cross attention: keys/values from encoder output or cache.
+            # Same amm routing as _attn_block — the apply_to contract
+            # covers every score/value product, cross-attention included
+            xamm = rt.amm if rt.amm.attn_active else None
             if cache_l is not None and enc_out is None:
                 xkv = (cache_l["xk"], cache_l["xv"])
                 xn, _ = attention(
                     p_l["xattn"], rmsnorm(hh, p_l["xattn_norm"], cfg.norm_eps),
-                    cfg, positions=positions, kv=xkv, causal=False)
+                    cfg, positions=positions, kv=xkv, causal=False,
+                    amm=xamm)
             else:
                 enc_pos = jnp.arange(enc_out.shape[1])[None] * jnp.ones(
                     (b, 1), jnp.int32)
@@ -378,7 +391,8 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
                 ek = apply_rope(ek, enc_pos, cfg.rope_theta)
                 xn, _ = attention(
                     p_l["xattn"], rmsnorm(hh, p_l["xattn_norm"], cfg.norm_eps),
-                    cfg, positions=positions, kv=(ek, ev), causal=False)
+                    cfg, positions=positions, kv=(ek, ev), causal=False,
+                    amm=xamm)
             hh = hh + xn.astype(hh.dtype)
             y = mlp_apply(p_l["mlp"], rmsnorm(hh, p_l["mlp_norm"],
                                               cfg.norm_eps), rt.amm, sub)

@@ -88,6 +88,10 @@ def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
     approximate-matmul datapath — serving weights are fixed, so the
     weight-side quantize + Booth decode happens once here instead of in
     every prefill/decode step (the closures capture the concrete planes).
+    Attention routing (``AmmConfig.apply_to`` "attn"/"all") needs no
+    wiring beyond ``rt``: the score/value products are activation x
+    activation, quantized per step inside ``lm_apply`` — there is no
+    weight side for a plane cache to hoist (docs/attention.md).
     """
     from ..models import lm_logical_axes, lm_table
     p_rules = RULES_MULTIPOD if is_multipod(mesh) else RULES

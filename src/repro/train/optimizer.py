@@ -2,7 +2,7 @@
 
 Optimizer state dtype is configurable: fp32 (default) or bf16 ("quantized
 optimizer state" — halves the dominant memory term at 671B; see
-EXPERIMENTS.md §Perf memory iterations).
+docs/perf.md §Model-side perf levers).
 """
 from __future__ import annotations
 

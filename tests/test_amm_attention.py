@@ -1,0 +1,326 @@
+"""Oracle/routing suite for approximate attention (apply_to="attn"/"all").
+
+The attention score product ``Q @ K^T`` and value product ``P @ V`` are
+activation x activation — no weight side, nothing to precode — so their
+Broken-Booth lowering is the both-operands-dynamic dot form
+(``kernels.bbm_matmul_dynamic`` via ``models.common.amm_dot``).  This
+suite holds that datapath to *bitwise* equality against the scalar
+closed-form oracles (``kernels.ref.amm_attention_ref`` /
+``amm_decode_attention_ref``) across wl x vbl x kind, pins the
+``apply_to`` routing (attention exact under "mlp" — the pre-routing code
+path — and MLPs exact under "attn"), checks decode-vs-prefill cache
+parity at the LM level, and verifies the flash-kernel fallback rule
+(``use_pallas`` is a no-op while amm attention is active).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AmmConfig, get_arch, reduced
+from repro.core.multipliers import MulSpec
+from repro.kernels.bbm_matmul import bbm_matmul_dynamic
+from repro.kernels.ref import (AMM_BOOTH_KINDS, amm_attention_ref,
+                               amm_decode_attention_ref, amm_dot_ref)
+from repro.models import ModelRuntime, init_cache, lm_apply, lm_init
+from repro.models import attention as attention_mod
+from repro.models.attention import (attention, attn_table, chunked_attention,
+                                    decode_attention)
+from repro.models.common import AmmRuntime, amm_dot, init_params
+
+RNG = np.random.default_rng(29)
+
+# Booth-family cells across word lengths, both truncation kinds, the
+# exact multiplier, and the single-digit-chunk operating point (16, 3)
+# whose PV product crosses the int32-exact chunk boundary
+SWEEP = [("bbm0", 8, 5), ("bbm1", 8, 7), ("bbm0", 12, 7), ("bbm1", 12, 11),
+         ("bbm0", 16, 13), ("bbm1", 16, 15), ("bbm0", 16, 3),
+         ("booth", 16, 0)]
+
+
+def _rt(mul, wl, vbl, apply_to="all", mode="bitexact"):
+    return AmmRuntime.build(AmmConfig(mode=mode, mul=mul, wl=wl, param=vbl,
+                                      apply_to=apply_to))
+
+
+def _qkv(b=2, sq=16, skv=16, h=4, kv=2, d=8, seed=3):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, kv, d)), jnp.float32)
+    return q, k, v
+
+
+# ------------------------------------------------ product-level oracle
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_bbm_matmul_dynamic_matches_scalar_oracle(mul, wl, vbl):
+    """The both-sides-dynamic entry point == the scalar closed forms,
+    including full-scale (envelope-edge) rows/columns."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((5, 12))
+    b = rng.standard_normal((12, 9))
+    a[0, :] = np.abs(a).max() * 1.5          # quantizes to +lim everywhere
+    b[:, 0] = -np.abs(b).max()
+    a, b = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    got = np.asarray(bbm_matmul_dynamic(a, b, wl=wl, vbl=vbl,
+                                        kind=AMM_BOOTH_KINDS[mul]))
+    ref = np.asarray(amm_dot_ref(a, b, MulSpec(mul, wl, vbl)))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_amm_dot_batched_matches_oracle():
+    """Leading batch axes vmap to per-slice dynamic scales on both sides."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((2, 3, 5, 12)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 3, 12, 7)), jnp.float32)
+    rt = _rt("bbm0", 16, 13)
+    np.testing.assert_array_equal(
+        np.asarray(amm_dot(a, b, rt)),
+        np.asarray(amm_dot(a, b, rt, oracle=True)))
+
+
+def test_amm_dot_is_ste():
+    """Gradients ride the exact batched matmul, not the integer path."""
+    rt = _rt("bbm0", 16, 13)
+    a = jnp.asarray(RNG.standard_normal((2, 4, 8)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((2, 8, 5)), jnp.float32)
+    g1 = jax.grad(lambda x: jnp.sum(amm_dot(x, b, rt)))(a)
+    g2 = jax.grad(lambda x: jnp.sum(x @ b))(a)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+# --------------------------------------------- attention-level oracle
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_chunked_attention_matches_scalar_oracle(mul, wl, vbl):
+    q, k, v = _qkv()
+    got = chunked_attention(q, k, v, causal=True, bq=8, bk=8,
+                            amm=_rt(mul, wl, vbl))
+    ref = amm_attention_ref(q, k, v, MulSpec(mul, wl, vbl), causal=True,
+                            bq=8, bk=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_chunked_attention_amm_noncausal_and_kvlen():
+    """Masking interactions: cross-attention (causal=False) and a traced
+    kv_len that dead-zeroes part of the final KV block."""
+    q, k, v = _qkv(sq=12, skv=20)
+    rt = _rt("bbm0", 16, 13)
+    spec = MulSpec("bbm0", 16, 13)
+    for causal, kv_len in ((False, None), (True, 13), (False, 13)):
+        got = chunked_attention(q, k, v, causal=causal, bq=8, bk=8,
+                                kv_len=kv_len, amm=rt)
+        ref = amm_attention_ref(q, k, v, spec, causal=causal, bq=8, bk=8,
+                                kv_len=kv_len)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("mul,wl,vbl", [("bbm0", 16, 13), ("bbm1", 16, 15),
+                                        ("bbm0", 16, 3)])
+def test_decode_attention_matches_scalar_oracle(mul, wl, vbl):
+    """Single-position decode against a cache with a dead (zero) tail."""
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, 8)), jnp.float32)
+    kc = np.zeros((2, 16, 2, 8), np.float32)
+    vc = np.zeros((2, 16, 2, 8), np.float32)
+    kc[:, :10] = rng.standard_normal((2, 10, 2, 8))
+    vc[:, :10] = rng.standard_normal((2, 10, 2, 8))
+    kc, vc = jnp.asarray(kc), jnp.asarray(vc)
+    got = decode_attention(q, kc, vc, 10, amm=_rt(mul, wl, vbl))
+    ref = amm_decode_attention_ref(q, kc, vc, 10, MulSpec(mul, wl, vbl))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_amm_attention_actually_differs_from_exact():
+    """The routing is not a no-op: a truncating spec changes the output
+    (and the exact Booth spec vbl=0 changes only by quantization)."""
+    q, k, v = _qkv()
+    exact = np.asarray(chunked_attention(q, k, v, causal=True, bq=8, bk=8))
+    approx = np.asarray(chunked_attention(q, k, v, causal=True, bq=8, bk=8,
+                                          amm=_rt("bbm0", 16, 13)))
+    assert not np.array_equal(exact, approx)
+    assert np.max(np.abs(exact - approx)) < 0.05   # still an approximation
+
+
+# --------------------------------------------------------- flash fallback
+def test_flash_fallback_bitwise_under_amm():
+    """use_pallas has no amm lowering: with amm active the wrapper must
+    take the chunked path, bitwise-identically to use_pallas=False."""
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
+                                                 wl=16, param=13,
+                                                 apply_to="all"))
+    p = init_params(attn_table(cfg), jax.random.key(0))
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    positions = jnp.arange(16)[None, :] * jnp.ones((2, 1), jnp.int32)
+    rt = AmmRuntime.build(cfg.amm)
+    y_pl, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
+                        amm=rt)
+    y_js, _ = attention(p, x, cfg, positions=positions, use_pallas=False,
+                        amm=rt)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_js))
+
+
+# ------------------------------------------------------- apply_to routing
+def _lm(apply_to, mode="bitexact"):
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode=mode, mul="bbm0",
+                                                 wl=16, param=13,
+                                                 apply_to=apply_to))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    return cfg, rt, params
+
+
+def test_routing_properties():
+    assert _rt("bbm0", 16, 13, "mlp").attn_active is False
+    assert _rt("bbm0", 16, 13, "attn").attn_active is True
+    assert _rt("bbm0", 16, 13, "all").attn_active is True
+    assert _rt("bbm0", 16, 13, "attn").mlp_active is False
+    assert _rt("bbm0", 16, 13, "mlp").mlp_active is True
+    assert _rt("bbm0", 16, 13, "all").mlp_active is True
+    # only the bitexact Booth datapath has an attention lowering
+    assert _rt("bbm0", 16, 13, "all", mode="noise").attn_active is False
+    assert _rt("bam", 8, 4, "all").attn_active is False
+    # noise keeps its historical MLP routing
+    assert _rt("bbm0", 16, 13, "all", mode="noise").mlp_active is True
+
+
+def test_apply_to_validated():
+    with pytest.raises(ValueError):
+        AmmConfig(apply_to="attention")
+
+
+def test_apply_to_mlp_keeps_attention_exact(monkeypatch):
+    """Regression pin: under apply_to="mlp" the attention layer never
+    receives an amm runtime — it executes the identical (pre-routing)
+    code path, so "mlp" output is bit-identical to pre-PR behavior by
+    construction.  Under "all" the same spy sees the runtime arrive."""
+    seen = []
+    orig = attention_mod.chunked_attention
+
+    def spy(*args, **kw):
+        seen.append(kw.get("amm"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(attention_mod, "chunked_attention", spy)
+    toks = jnp.asarray(RNG.integers(0, 512, (2, 8)), jnp.int32)
+    cfg, rt, params = _lm("mlp")
+    lm_apply(params, cfg, rt, toks, rng=jax.random.key(2))
+    assert seen and all(a is None for a in seen)
+    seen.clear()
+    cfg, rt, params = _lm("all")
+    lm_apply(params, cfg, rt, toks, rng=jax.random.key(2))
+    assert seen and all(a is not None for a in seen)
+
+
+def test_no_dead_plane_cache_under_attn_only_routing():
+    """apply_to="attn" routes no weight-side matmul: lm_amm_planes must
+    return None instead of building an MLP digit-plane cache nothing
+    reads (dead startup work + memory held for the process lifetime)."""
+    from repro.models import lm_amm_planes
+    cfg, rt, params = _lm("attn")
+    assert lm_amm_planes(cfg, rt.amm, params) is None
+    cfg, rt, params = _lm("all")
+    assert lm_amm_planes(cfg, rt.amm, params) is not None
+
+
+def test_apply_to_cells_are_distinct():
+    """mlp / attn / all route different matmul families: all three logits
+    differ pairwise, and each stays finite."""
+    toks = jnp.asarray(RNG.integers(0, 512, (2, 10)), jnp.int32)
+    outs = {}
+    for ap in ("mlp", "attn", "all"):
+        cfg, rt, params = _lm(ap)
+        logits, _, _ = lm_apply(params, cfg, rt, toks, rng=jax.random.key(2))
+        outs[ap] = np.asarray(logits)
+        assert np.isfinite(outs[ap]).all()
+    assert not np.array_equal(outs["mlp"], outs["attn"])
+    assert not np.array_equal(outs["mlp"], outs["all"])
+    assert not np.array_equal(outs["attn"], outs["all"])
+
+
+@pytest.mark.parametrize("apply_to", ["attn", "all"])
+def test_decode_matches_prefill_under_attn_routing(apply_to):
+    """Cache parity: token-by-token decode through the approximate
+    attention datapath reproduces the parallel forward.
+
+    Not bitwise — decode quantizes its products over the whole cache
+    slice while the chunked prefill quantizes per KV block (different
+    dynamic-scale granularity, docs/attention.md) and the cache itself is
+    bf16 — but it must stay within the same tolerance the exact path's
+    incremental-vs-parallel test uses."""
+    cfg, rt, params = _lm(apply_to)
+    b, s = 2, 10
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full, _, _ = lm_apply(params, cfg, rt, toks, mode="train")
+    caches = init_cache(cfg, b, 16)
+    outs = []
+    for t in range(s):
+        lg, _, caches = lm_apply(params, cfg, rt, toks[:, t:t + 1],
+                                 mode="decode", caches=caches,
+                                 pos=jnp.int32(t))
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(inc - full))) < 1e-2
+
+
+def test_train_step_grads_under_attn_routing():
+    """STE keeps the loss differentiable with attention approximated."""
+    from repro.models import lm_loss
+    cfg, rt, params = _lm("all")
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    labels = jnp.roll(toks, -1, axis=-1)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, rt, toks, labels,
+                          rng=jax.random.key(3))[0])(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+def test_encdec_cross_attention_routed(monkeypatch):
+    """Whisper-family cross-attention is part of the apply_to contract:
+    under "all" every attention() invocation — decoder self-attention
+    AND both cross-attention sites — must receive the amm runtime."""
+    import repro.models.transformer as tr
+    seen = []
+    orig = tr.attention
+
+    def spy(*args, **kw):
+        seen.append(kw.get("amm"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(tr, "attention", spy)
+    cfg = reduced(get_arch("whisper-base"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
+                                                 wl=16, param=13,
+                                                 apply_to="all"))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    enc = jnp.ones((2, cfg.encoder_len, cfg.d_model), jnp.float32) * 0.01
+    logits, _, _ = lm_apply(params, cfg, rt, toks, rng=jax.random.key(2),
+                            encoder_embeds=enc)
+    assert seen and all(a is not None for a in seen)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_mla_attn_routing_finite():
+    """MLA (deepseek) threads the same amm routing through its expanded
+    K/V products."""
+    cfg = reduced(get_arch("deepseek-v3-671b"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
+                                                 wl=16, param=13,
+                                                 apply_to="all"))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    exact_cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="off"))
+    l_amm, _, _ = lm_apply(params, cfg, rt, toks, rng=jax.random.key(2))
+    l_off, _, _ = lm_apply(params, exact_cfg, rt=ModelRuntime.build(exact_cfg),
+                           tokens=toks, rng=jax.random.key(2))
+    assert np.isfinite(np.asarray(l_amm)).all()
+    assert not np.array_equal(np.asarray(l_amm), np.asarray(l_off))

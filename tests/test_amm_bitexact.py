@@ -76,11 +76,10 @@ def test_amm_dense_matches_oracle(mul, wl, vbl):
 def test_apply_to_is_model_level_routing_only():
     """``AmmConfig.apply_to`` selects *which* model matmuls are
     approximated; it is not (and must not become) an input to the
-    per-matmul datapath.  Today only the gated MLPs route through
-    ``amm_dense`` under either value, so the layer's output — and its
-    oracle equality — is identical across the axis; if a future PR wires
-    apply_to="all" into attention, this pins that the datapath itself
-    stays apply_to-independent."""
+    per-matmul datapath.  apply_to="all" now routes attention's QK^T/PV
+    through ``amm_dot`` as well (tests/test_amm_attention.py owns that
+    axis), but ``amm_dense`` itself — the weight-side datapath — must
+    stay apply_to-independent, which this pins."""
     x, w = _operands()
     for mul, wl, vbl in (("bbm0", 16, 13), ("bam", 8, 4)):
         a = np.asarray(amm_dense(x, w, _rt(mul, wl, vbl, "mlp")))

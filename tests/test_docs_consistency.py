@@ -1,0 +1,71 @@
+"""Docs-consistency gate: no reference to a nonexistent repo file.
+
+The EXPERIMENTS.md class of rot: a docstring or doc page cites a repo
+file that was never committed (or was later renamed) and every reader
+after that chases a ghost.  This test scans the python sources and the
+markdown docs for ``*.md`` and ``*.py`` path references and fails when a
+referenced file does not exist — relative to the repo root, to the
+referencing file's own directory, or to ``docs/``.
+
+Scope is deliberately the *maintained* surfaces: ``src``, ``docs``,
+``tests``, ``benchmarks``, ``examples`` plus the top-level README and
+ROADMAP.  CHANGES.md (an append-only history), ISSUE.md and the
+retrieval artifacts (PAPER/PAPERS/SNIPPETS) are historical records, not
+live documentation, and may legitimately name files that no longer
+exist.
+"""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+SCAN_DIRS = ["src", "docs", "tests", "benchmarks", "examples"]
+SCAN_FILES = ["README.md", "ROADMAP.md"]
+
+# path-ish tokens ending in .md or .py; the leading charset excludes
+# sentence punctuation so prose like "foo.md." strips cleanly
+_REF = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:md|py)\b")
+
+# names that are not repo-file references
+_IGNORE = {
+    "conftest.py",            # pytest convention, resolved by pytest itself
+    "setup.py",               # generic packaging prose
+}
+
+
+def _scan_targets():
+    me = Path(__file__).resolve()
+    for d in SCAN_DIRS:
+        for p in sorted((ROOT / d).rglob("*")):
+            if (p.suffix in (".py", ".md") and p.is_file()
+                    and p.resolve() != me):
+                yield p
+    for f in SCAN_FILES:
+        p = ROOT / f
+        if p.exists():
+            yield p
+
+
+def _resolves(ref: str, source: Path) -> bool:
+    candidates = [ROOT / ref, source.parent / ref, ROOT / "docs" / ref,
+                  # src-layout and package-relative spellings:
+                  # "repro/launch/serve.py", "kernels/bbm_matmul.py"
+                  ROOT / "src" / ref, ROOT / "src" / "repro" / ref]
+    return any(c.is_file() for c in candidates)
+
+
+def test_no_references_to_missing_repo_files():
+    missing = []
+    for path in _scan_targets():
+        text = path.read_text(encoding="utf-8")
+        for m in _REF.finditer(text):
+            ref = m.group(0).rstrip(".")
+            name = ref.rsplit("/", 1)[-1]
+            if name in _IGNORE:
+                continue
+            if not _resolves(ref, path):
+                line = text.count("\n", 0, m.start()) + 1
+                missing.append(f"{path.relative_to(ROOT)}:{line}: {ref}")
+    assert not missing, (
+        "references to nonexistent repo files (the EXPERIMENTS.md class "
+        "of rot):\n  " + "\n  ".join(sorted(set(missing))))
