@@ -1,0 +1,173 @@
+"""Attention benchmark: flash-amm vs chunked-amm vs exact-flash.
+
+Times causal self-attention throughput (tokens/s) against context length
+for the three routes ``models.attention.attention`` can take when
+``use_pallas`` is set:
+
+  * exact_flash: the exact flash kernel (``kernels.flash_attention``) —
+    on CPU this runs through the Pallas interpreter, so its absolute
+    numbers are context only (the cell is what a TPU backend compiles),
+  * chunked_amm: the Broken-Booth datapath on the PR-5 chunked
+    online-softmax schedule at the model-default tiles (bq=512/bk=1024),
+    s32 dot-form contractions — the pre-flash fallback and the bitwise
+    reference,
+  * flash_amm: the same datapath on the flash schedule
+    (``kernels.flash_attention_amm``) — per-tile quantization at
+    128/128 tiles with the correction contractions lowered onto
+    f32-exact-envelope gemms.  Off TPU the fused XLA lowering of the
+    tile step is timed (that is what the route runs); on TPU the Pallas
+    kernel itself.
+
+Cells that are compared are timed round-robin (interleaved rounds, same
+noise distribution — see benchmarks/filterbank.py for the rationale) and
+reported as median us_per_call plus tokens/s.  Derived metrics:
+
+  * ``flash_amm_bitexact``: flash-amm output == chunked-amm output via
+    ``assert_array_equal`` at matched tiles and head counts
+    (``models.attention.flash_amm_chunked_equiv``) — quantization is per
+    block, so this is an exact-integer contract, not an allclose one.
+    CI fails on 0.
+  * ``flash_amm_speedup``: chunked-amm time / flash-amm time at the
+    largest context swept.
+
+Results land in ``BENCH_attention.json`` with platform metadata in the
+``config`` block; trajectories are only comparable within one
+(machine, backend, jax) triple.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform as platform_mod
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import AmmConfig
+from repro.kernels import flash_attention, flash_attention_amm, on_tpu
+from repro.models.attention import chunked_attention, flash_amm_chunked_equiv
+from repro.models.common import AmmRuntime
+
+# wl=16 operating point of the paper's Type-0 multiplier; d=64 head dim
+POINT = ("bbm0", 16, 13)
+CONTEXTS = [1024, 4096, 16384]
+SMOKE_CONTEXTS = [256]
+HEADS, HEAD_DIM = 1, 64
+
+
+def _time_many(fns, repeats: int = 3) -> list[float]:
+    """Median wall times, measured round-robin (see filterbank.py)."""
+    for fn in fns:
+        fn()                               # warm-up / compile
+    ts = [[] for _ in fns]
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            ts[i].append(time.perf_counter() - t0)
+    return [float(np.median(t)) for t in ts]
+
+
+def _qkv(s, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (1, HEADS, s, HEAD_DIM)
+    q = jax.numpy.asarray(rng.standard_normal(shape), jax.numpy.float32)
+    k = jax.numpy.asarray(rng.standard_normal(shape), jax.numpy.float32)
+    v = jax.numpy.asarray(rng.standard_normal(shape), jax.numpy.float32)
+    return q, k, v
+
+
+def attention_sweep(smoke: bool = False, out: str | None = None):
+    mul, wl, vbl = POINT
+    rt = AmmRuntime.build(AmmConfig(mode="bitexact", mul=mul, wl=wl,
+                                    param=vbl, apply_to="all"))
+    wl_, vbl_, kind = rt.attn_lowering
+    contexts = SMOKE_CONTEXTS if smoke else CONTEXTS
+    rows = []
+    speedup_at_max = 0.0
+    for s in contexts:
+        q, k, v = _qkv(s)
+        # (B, S, H, D) layout for the chunked schedule
+        qs, ks, vs = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+
+        def run_flash_amm():
+            return jax.block_until_ready(flash_attention_amm(
+                q, k, v, wl=wl_, vbl=vbl_, kind=kind, causal=True))
+
+        def run_chunked_amm():
+            return jax.block_until_ready(chunked_attention(
+                qs, ks, vs, causal=True, amm=rt))
+
+        def run_exact_flash():
+            return jax.block_until_ready(flash_attention(
+                q, k, v, causal=True, interpret=not on_tpu()))
+
+        repeats = 2 if (not smoke and s >= CONTEXTS[-1]) else 3
+        t_flash, t_chunked, t_exact = _time_many(
+            [run_flash_amm, run_chunked_amm, run_exact_flash],
+            repeats=repeats)
+        for cell, t in (("flash_amm", t_flash), ("chunked_amm", t_chunked),
+                        ("exact_flash", t_exact)):
+            rows.append({"cell": cell, "context": s, "heads": HEADS,
+                         "head_dim": HEAD_DIM, "mul": mul, "wl": wl,
+                         "vbl": vbl, "us_per_call": t * 1e6,
+                         "tokens_per_s": s / t})
+        speedup_at_max = t_chunked / t_flash
+
+    # bit-exactness checkpoint at the smallest context: flash-amm vs the
+    # chunked schedule at the flash tiles (matched per-block scales)
+    s = contexts[0]
+    q, k, v = _qkv(s, seed=1)
+    got = np.asarray(flash_attention_amm(q, k, v, wl=wl_, vbl=vbl_,
+                                         kind=kind, causal=True))
+    ref = np.asarray(flash_amm_chunked_equiv(q, k, v, rt, causal=True))
+    bitexact = bool(np.array_equal(got, ref))
+
+    derived = {
+        "flash_amm_bitexact": int(bitexact),
+        "flash_amm_speedup": speedup_at_max,
+        "speedup_context": contexts[-1],
+        "cells": len(rows),
+    }
+    if out:
+        config = {
+            "smoke": smoke, "on_tpu": on_tpu(),
+            "point": {"mul": mul, "wl": wl, "vbl": vbl},
+            "exact_flash_interpreted": not on_tpu(),
+            "flash_amm_lowering": "pallas" if on_tpu() else "xla",
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "numpy_version": np.__version__,
+            "python_version": platform_mod.python_version(),
+            "platform": platform_mod.platform(),
+            "machine": platform_mod.machine(),
+            "cpu_count": os.cpu_count(),
+        }
+        with open(out, "w") as f:
+            json.dump({"config": config, "derived": derived, "rows": rows},
+                      f, indent=1)
+    return rows, derived
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced configuration for CI")
+    p.add_argument("--out", default="BENCH_attention.json",
+                   help="results file")
+    args = p.parse_args(argv)
+    _, derived = attention_sweep(smoke=args.smoke, out=args.out)
+    print(json.dumps(derived, indent=1, sort_keys=True))
+    # CI gate: the flash schedule must reproduce the chunked datapath bit
+    # for bit; throughput is reported, not gated (runner-dependent)
+    return 0 if derived["flash_amm_bitexact"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

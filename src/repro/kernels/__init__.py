@@ -1,19 +1,24 @@
 """Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
-from .bbm_matmul import bbm_matmul_dynamic, bbm_matmul_scaled
+from .bbm_matmul import (bbm_matmul_dynamic, bbm_matmul_scaled,
+                         dot_scaled_chunked)
 from .booth_rows import (amm_chunk_len, bbm_rows_product_dotform,
                          booth_correction, booth_high_value, booth_precode,
-                         booth_value, dotform_scaled_bound, resolve_form)
+                         booth_value, dotform_scaled_bound,
+                         f32_exact_chunk_len, resolve_form)
 from .fir_kernel import (fir_bbm, fir_bbm_bank, fir_bbm_bank_precoded,
                          min_safe_shift)
+from .flash_attention import FLASH_AMM_BK, FLASH_AMM_BQ, flash_attention_amm
 from .ops import (bbm_matmul, bbm_matmul_precoded, fir_filterbank,
                   fir_filterbank_precoded, flash_attention, on_tpu,
                   quant_matmul)
 
-__all__ = ["amm_chunk_len", "bbm_matmul", "bbm_matmul_dynamic",
-           "bbm_matmul_precoded",
+__all__ = ["FLASH_AMM_BK", "FLASH_AMM_BQ", "amm_chunk_len", "bbm_matmul",
+           "bbm_matmul_dynamic", "bbm_matmul_precoded",
            "bbm_matmul_scaled", "bbm_rows_product_dotform",
            "booth_correction", "booth_high_value", "booth_precode",
-           "booth_value", "dotform_scaled_bound", "fir_bbm", "fir_bbm_bank",
+           "booth_value", "dot_scaled_chunked", "dotform_scaled_bound",
+           "f32_exact_chunk_len", "fir_bbm", "fir_bbm_bank",
            "fir_bbm_bank_precoded", "fir_filterbank",
-           "fir_filterbank_precoded", "flash_attention", "min_safe_shift",
-           "on_tpu", "quant_matmul", "resolve_form"]
+           "fir_filterbank_precoded", "flash_attention",
+           "flash_attention_amm", "min_safe_shift", "on_tpu", "quant_matmul",
+           "resolve_form"]

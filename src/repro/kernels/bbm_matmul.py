@@ -54,13 +54,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.booth import num_pp_rows
 from .booth_rows import (amm_chunk_len, bbm_rows_product_precoded,
-                         booth_high_value, booth_precode, num_corr_rows,
-                         resolve_form, scaled_trunc_rows, signed_digit,
-                         split_signed)
+                         booth_high_value, booth_precode,
+                         f32_exact_chunk_len, num_corr_rows, resolve_form,
+                         scaled_trunc_rows, signed_digit, split_signed)
 from .ref import amm_quantize
 
 __all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_dynamic",
-           "bbm_matmul_precoded", "bbm_matmul_scaled"]
+           "bbm_matmul_precoded", "bbm_matmul_scaled", "dot_scaled_chunked"]
 
 # auto-form only: above this many int32 elements the shift > vbl residual
 # branch's (M, K, N) per-product temporary stops being a fair trade against
@@ -78,7 +78,37 @@ _MOD_BRANCHES = {0: ((1, 0), (2, 0), (-1, 0), (-2, 0)),
                  1: ((1, 0), (2, 0), (0, 1), (-1, 1), (-2, 1))}
 
 
-def _dot_scaled(x_s, wmag, wneg, *, wl: int, vbl: int, kind: int):
+def _dot_i32(x, y, *, f32_chunk: int = 0):
+    """int32 contraction ``x @ y``, optionally via exact-envelope f32 gemms.
+
+    ``f32_chunk = 0`` is the historical lowering: one s32 dot.  A positive
+    ``f32_chunk`` (from ``booth_rows.f32_exact_chunk_len``) splits the
+    contraction into K-chunks inside the caller's f32-exact envelope —
+    every product and every partial sum is an integer of magnitude
+    <= 2^24, so the f32 gemm computes the exact integer and the cast back
+    to int32 is exact.  Bit-identical either way; the f32 route is what
+    lets the flash-amm tile arithmetic ride the f32 matmul units
+    (HIGHEST precision pins the TPU MXU to the exact f32 decomposition;
+    CPU XLA ignores it).
+    """
+    if not f32_chunk:
+        return jax.lax.dot(x, y, preferred_element_type=jnp.int32)
+    k = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    acc = None
+    for lo in range(0, k, f32_chunk):
+        part = jax.lax.dot(xf[:, lo:lo + f32_chunk],
+                           yf[lo:lo + f32_chunk, :],
+                           precision=jax.lax.Precision.HIGHEST,
+                           preferred_element_type=jnp.float32
+                           ).astype(jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _dot_scaled(x_s, wmag, wneg, *, wl: int, vbl: int, kind: int,
+                f32_chunk: int = 0):
     """``sum_k bbm(x, w) / 2^vbl`` as pure dense contractions, int32.
 
     Every BBM product is ``2^vbl * M`` with
@@ -102,14 +132,16 @@ def _dot_scaled(x_s, wmag, wneg, *, wl: int, vbl: int, kind: int):
 
     int32-exact for chunks within ``booth_rows.amm_chunk_len(wl, vbl)``.
     x_s: (M, K) signed codes; wmag/wneg: (wl//2, K, N) digit planes.
+    ``f32_chunk``: nonzero routes every contraction through ``_dot_i32``'s
+    exact-envelope f32 gemms (bit-identical; the flash-amm fast path).
     """
     bq = booth_high_value(wmag, wneg, wl=wl, vbl=vbl)        # (K, N)
-    acc = jax.lax.dot(x_s, bq, preferred_element_type=jnp.int32)
+    acc = _dot_i32(x_s, bq, f32_chunk=f32_chunk)
     for r in range(num_corr_rows(wl, vbl)):
         m = vbl - 2 * r                   # > 0 for every correction row
         mask = (1 << m) - 1
         d = signed_digit(wmag[r], wneg[r])                   # (K, N)
-        rowdot = jax.lax.dot(x_s, d, preferred_element_type=jnp.int32)
+        rowdot = _dot_i32(x_s, d, f32_chunk=f32_chunk)
         if kind:
             rowdot = rowdot - jnp.sum(wneg[r], axis=0,
                                       dtype=jnp.int32)[None, :]
@@ -118,8 +150,7 @@ def _dot_scaled(x_s, wmag, wneg, *, wl: int, vbl: int, kind: int):
         for v, s in _MOD_BRANCHES[kind]:
             t = (v * xm - s) & mask                          # (M, K)
             ind = (d == v) if kind == 0 else (d == v) & (wneg[r] == s)
-            part = jax.lax.dot(t, ind.astype(jnp.int32),
-                               preferred_element_type=jnp.int32)
+            part = _dot_i32(t, ind.astype(jnp.int32), f32_chunk=f32_chunk)
             modsum = part if modsum is None else modsum + part
         acc = acc + ((rowdot - modsum) >> m)
     return acc
@@ -204,6 +235,48 @@ def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
 
     acc, _ = jax.lax.scan(body, jnp.zeros((mm, nn), jnp.float32),
                           (xc, wmc, wnc))
+    return acc * scale
+
+
+def dot_scaled_chunked(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
+                       f32_dots: bool = False):
+    """Kernel-safe chunked ``sum_k bbm(x, w)`` — bitwise ``bbm_matmul_scaled``.
+
+    Same contraction schedule as ``bbm_matmul_scaled`` (K chunked by
+    ``amm_chunk_len``, int32-exact partials accumulated in float32 in
+    chunk order, rescaled by ``2^vbl``), but built from a static python
+    loop over ragged chunk slices instead of pad + ``lax.scan`` — legal
+    inside a Pallas kernel body, where scan over sliced operands is not.
+    The two schedules are bit-identical: padded zero codes decode to
+    all-zero digit planes and contribute 0 to every contraction
+    (including the kind-1 residue branch, whose indicator is gated on the
+    padded ``wneg``), so ragged-final-chunk partials equal padded-chunk
+    partials and the float32 adds see the same values in the same order.
+
+    ``f32_dots=True`` additionally routes each chunk's contractions
+    through the exact-envelope f32 gemms (``f32_exact_chunk_len``) — the
+    flash-amm fast path; still bit-identical, falls back to s32 dots at
+    operating points with no f32 envelope.
+
+    x: (M, K) int32 codes; wmag/wneg: (wl//2, K, N) planes.  Returns
+    float32 (M, N) at full product scale.
+    """
+    kk = x.shape[-1]
+    _, x_s = split_signed(x, wl)
+    chunk = amm_chunk_len(wl, vbl)
+    f32_chunk = f32_exact_chunk_len(wl, vbl) if f32_dots else 0
+    scale = float(1 << vbl)
+    if kk <= chunk:
+        return _dot_scaled(x_s, wmag, wneg, wl=wl, vbl=vbl, kind=kind,
+                           f32_chunk=f32_chunk).astype(jnp.float32) * scale
+    acc = None
+    for lo in range(0, kk, chunk):
+        part = _dot_scaled(x_s[:, lo:lo + chunk],
+                           wmag[:, lo:lo + chunk],
+                           wneg[:, lo:lo + chunk],
+                           wl=wl, vbl=vbl, kind=kind, f32_chunk=f32_chunk)
+        part = part.astype(jnp.float32)
+        acc = part if acc is None else acc + part
     return acc * scale
 
 

@@ -9,9 +9,9 @@ from ..core.multipliers import MulSpec, mul as core_mul
 from .booth_rows import amm_chunk_len
 
 __all__ = ["amm_approx_ref", "amm_attention_ref", "amm_decode_attention_ref",
-           "amm_dense_ref", "amm_dot_ref", "amm_quantize",
-           "bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
-           "attention_ref"]
+           "amm_dense_ref", "amm_dot_ref", "amm_flash_attention_ref",
+           "amm_quantize", "bbm_matmul_ref", "fir_bank_ref",
+           "quant_matmul_ref", "attention_ref"]
 
 # Booth-family specs and their closed-form truncation kind; every other
 # multiplier family has no dot-form lowering and keeps the scalar path
@@ -45,7 +45,15 @@ def amm_quantize(v, wl: int):
     """
     lim = 2 ** (wl - 1) - 1
     vf = jnp.asarray(v, jnp.float32)
-    s = jnp.maximum(jnp.max(jnp.abs(vf)) / float(lim), 1e-12)
+    # multiply by the reciprocal constant rather than divide by lim: XLA's
+    # algebraic simplifier rewrites division-by-constant exactly this way
+    # inside compiled programs (1 ULP below the correctly-rounded quotient),
+    # while eager execution divides for real — writing the multiply makes
+    # the scale bit-identical across compilation contexts, which the
+    # flash-amm vs chunked-amm equality contract depends on (their
+    # quantizers run in different contexts by design).  Division by the
+    # *runtime* scale below is a true fdiv in every context.
+    s = jnp.maximum(jnp.max(jnp.abs(vf)) * (1.0 / lim), 1e-12)
     s = jax.lax.stop_gradient(s)
     codes = jnp.clip(jnp.round(vf / s), -lim - 1, lim).astype(jnp.int32)
     return codes, s
@@ -147,6 +155,25 @@ def amm_attention_ref(q, k, v, spec: MulSpec, *, causal: bool = True,
     return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
                              bq=bq, bk=bk, kv_len=kv_len, amm=rt,
                              amm_oracle=True)
+
+
+def amm_flash_attention_ref(q, k, v, spec: MulSpec, *, causal: bool = True):
+    """Scalar oracle of ``flash_attention.flash_attention_amm``.
+
+    The flash-amm kernel is bit-identical to the chunked schedule at the
+    flash tile sizes (quantization is per block, so the blocking is part
+    of the contract); its oracle is therefore ``amm_attention_ref`` — the
+    same schedule with every product through the scalar closed forms —
+    pinned to ``FLASH_AMM_BQ``/``FLASH_AMM_BK`` and transposed to the
+    kernel's (B, H, S, D) layout.  Head counts must be matched (the
+    caller repeats KV heads, as for the kernel).
+    """
+    from .flash_attention import FLASH_AMM_BK, FLASH_AMM_BQ
+    out = amm_attention_ref(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), spec, causal=causal,
+                            bq=FLASH_AMM_BQ, bk=FLASH_AMM_BK)
+    return out.transpose(0, 2, 1, 3)
 
 
 def amm_decode_attention_ref(q, k_cache, v_cache, kv_len, spec: MulSpec):

@@ -43,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--vbl", type=int, default=13)
     ap.add_argument("--amm-pallas", action="store_true",
                     help="mode=noise: fused Pallas quant_matmul kernel")
+    ap.add_argument("--flash-attn", action="store_true",
+                    help="route prefill attention through the flash "
+                         "lowering (exact-flash, or flash-amm when "
+                         "--amm-attn makes attention amm-active); decode "
+                         "keeps the cache path")
     add_amm_attn_arg(ap)
     args = ap.parse_args(argv)
     apply_to = resolve_amm_apply_to(ap, args)
@@ -54,7 +59,7 @@ def main(argv=None):
         cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
                            param=args.vbl, use_pallas=args.amm_pallas,
                            apply_to=apply_to))
-    rt = ModelRuntime.build(cfg)
+    rt = ModelRuntime.build(cfg, use_pallas=args.flash_attn)
     params = lm_init(cfg, jax.random.key(0))
     # jitted decode step with the digit-plane cache baked into the closure:
     # the bitexact datapath's weight decode happens once here, every token

@@ -48,6 +48,11 @@ def main(argv=None):
                          "quant_matmul kernel (TPU fast path; interpreted "
                          "on CPU).  mode=bitexact needs no flag — it "
                          "always lowers to the dot-form contractions.")
+    ap.add_argument("--flash-attn", action="store_true",
+                    help="route attention through the flash lowering "
+                         "(exact-flash, or flash-amm when --amm-attn makes "
+                         "attention amm-active); gradients take the "
+                         "chunked path's straight-through rule either way")
     add_amm_attn_arg(ap)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -61,7 +66,7 @@ def main(argv=None):
         cfg, amm=AmmConfig(mode=args.amm, mul=args.mul, wl=args.wl,
                            param=args.vbl, use_pallas=args.amm_pallas,
                            apply_to=apply_to))
-    rt = ModelRuntime.build(cfg)
+    rt = ModelRuntime.build(cfg, use_pallas=args.flash_attn)
     mesh = make_host_mesh(args.mesh_data, args.mesh_model)
     tc = TrainConfig(microbatches=args.microbatches,
                      opt=OptConfig(lr=args.lr, total_steps=args.steps))

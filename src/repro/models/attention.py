@@ -13,9 +13,23 @@ dot-form datapath (``models.common.amm_dot`` on
 of the MLPs' ``amm_dense``.  Both products are formed *per KV block*, each
 block's integer accumulation completing before any online-softmax
 renormalization touches its result, so the softmax algebra composes
-unchanged (docs/attention.md carries the envelope argument).  The Pallas
-flash kernel has no amm lowering; when amm is active the wrappers fall
-back to this pure-JAX chunked path.
+unchanged (docs/attention.md carries the envelope argument).
+
+Routing (prefill, no cache) — ``use_pallas`` picks the flash lowering for
+both exact *and* amm attention:
+  * exact-flash:  ``use_pallas``, ``amm`` inactive — the Pallas kernel in
+    kernels/flash_attention.py.
+  * flash-amm:    ``use_pallas``, ``amm`` active with a Booth-family
+    bitexact lowering — ``kernels.flash_attention.flash_attention_amm``
+    (Pallas kernel on TPU, fused XLA scan elsewhere), wrapped in a
+    ``custom_vjp`` whose backward is the chunked path's STE gradient.
+  * chunked-amm / chunked-exact: everything else — the pure-JAX path
+    below, which is also the flash-amm bit-equality reference
+    (``flash_amm_chunked_equiv``) and the oracle-comparison path.
+Falling off the flash path while ``use_pallas`` was requested (sequence
+cap, amm family without a lowering) emits a ``FlashFallbackWarning``
+naming the reason, so long-context runs can tell why they landed on the
+chunked path.
 
 KV caches are ``(batch, seq, kv_heads, head_dim)`` per tensor (MLA caches the
 compressed latent ``(batch, seq, kv_latent+rope)``), updated with
@@ -23,6 +37,7 @@ compressed latent ``(batch, seq, kv_latent+rope)``), updated with
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Dict, NamedTuple, Optional
 
@@ -33,9 +48,27 @@ from ..configs.base import ArchConfig
 from .common import Spec, amm_dot, apply_rope, rmsnorm
 
 __all__ = ["attn_table", "mla_table", "attention", "mla_attention",
-           "chunked_attention", "decode_attention"]
+           "chunked_attention", "decode_attention",
+           "flash_amm_chunked_equiv", "FlashFallbackWarning"]
 
 NEG_INF = -1e30
+
+# flash-path sequence cap: above this the kernel's (batch*heads, S, D)
+# operand working set outgrows the tested envelope and the chunked path is
+# selected instead.  Module-level so tests (and long-context experiments)
+# can lower it to exercise the fallback warning.
+_FLASH_SEQ_CAP = 32768
+
+
+class FlashFallbackWarning(UserWarning):
+    """A ``use_pallas`` attention call fell back to the chunked path."""
+
+
+def _flash_fallback(reason: str, **ctx):
+    detail = ", ".join(f"{k}={v}" for k, v in ctx.items())
+    warnings.warn(FlashFallbackWarning(
+        f"use_pallas requested but attention fell back to the chunked "
+        f"path: {reason} ({detail})"), stacklevel=3)
 
 
 def _maybe_constrain(x, *axes):
@@ -211,6 +244,59 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
     return out[:, :sq].astype(q.dtype)
 
 
+def flash_amm_chunked_equiv(q, k, v, amm, *, causal: bool = True):
+    """The chunked-amm run that flash-amm is bit-identical to.
+
+    (B, H, S, D) operands with matched head counts, exactly as
+    ``flash_attention_amm`` takes them.  Quantization is per block, so the
+    equality contract needs the chunked schedule at the flash tile sizes —
+    this wrapper pins them (``FLASH_AMM_BQ``/``FLASH_AMM_BK``) and is both
+    the test reference and the backward function of the flash-amm
+    ``custom_vjp`` (the chunked path's straight-through gradient *is* the
+    flash-amm gradient).
+    """
+    from ..kernels.flash_attention import FLASH_AMM_BK, FLASH_AMM_BQ
+    out = chunked_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            bq=FLASH_AMM_BQ, bk=FLASH_AMM_BK, amm=amm)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_amm_impl(amm, causal, q, k, v):
+    from ..kernels.flash_attention import flash_attention_amm
+    wl, vbl, kind = amm.attn_lowering
+    return flash_attention_amm(q, k, v, wl=wl, vbl=vbl, kind=kind,
+                               causal=causal)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _flash_amm_ste(amm, causal, q, k, v):
+    """Flash-amm forward with the chunked path's STE gradient.
+
+    The kernel composes ``exact + stop_gradient(approx - exact)`` per
+    tile, but differentiating *through* a Pallas call is not supported —
+    so the backward runs ``jax.vjp`` of the bit-identical chunked
+    schedule instead, which routes every gradient through the exact
+    products (the same straight-through rule ``amm_dot`` implements).
+    """
+    return _flash_amm_impl(amm, causal, q, k, v)
+
+
+def _flash_amm_fwd(amm, causal, q, k, v):
+    return _flash_amm_impl(amm, causal, q, k, v), (q, k, v)
+
+
+def _flash_amm_bwd(amm, causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda qq, kk, vv: flash_amm_chunked_equiv(
+        qq, kk, vv, amm, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_flash_amm_ste.defvjp(_flash_amm_fwd, _flash_amm_bwd)
+
+
 def decode_attention(q, k_cache, v_cache, kv_len, *, amm=None,
                      amm_oracle: bool = False):
     """Single-position attention against a cache.
@@ -259,10 +345,17 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
     the current decode position (traced scalar).  kv: optional externally
     provided (k, v) (cross-attention).  amm: optional ``AmmRuntime`` — the
     score/value products go through the approximate datapath (the Q/K/V/O
-    projections stay exact; docs/attention.md).  The Pallas flash kernel
-    has no amm lowering, so ``use_pallas`` is honored only when ``amm`` is
-    None — amm-routed calls take the chunked path, whose per-block
-    products are where the datapath hooks in.  Returns (out, new_cache).
+    projections stay exact; docs/attention.md).  ``use_pallas`` selects
+    the flash lowering for exact *and* amm-active prefill (exact-flash /
+    flash-amm; the module docstring has the routing table); calls that
+    fall off it — sequence beyond ``_FLASH_SEQ_CAP``, an amm family with
+    no dot-form lowering, cache-backed prefill — take the chunked path,
+    with a ``FlashFallbackWarning`` when ``use_pallas`` was requested.
+    GQA note: the flash lowerings repeat KV heads before quantizing, so
+    their per-block scales are per *repeated* head; the chunked path
+    group-folds and scales per KV head.  Both are valid amm schedules —
+    the bit-equality contract is defined at matched head counts
+    (``flash_amm_chunked_equiv``).  Returns (out, new_cache).
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -307,15 +400,33 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
             out = chunked_attention(q, kk, vv, causal=causal, q_offset=pos,
                                     kv_len=pos + s,
                                     remat_qblock=remat_qblock, amm=amm)
-    elif use_pallas and amm is None and s <= 32768:
-        from ..kernels import flash_attention
+    elif use_pallas and s <= _FLASH_SEQ_CAP and (
+            amm is None or amm.attn_lowering is not None):
         groups = q.shape[2] // k.shape[2]
         kk = jnp.repeat(k, groups, axis=2)
         vv = jnp.repeat(v, groups, axis=2)
-        out = flash_attention(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
-                              vv.transpose(0, 2, 1, 3), causal=causal)
+        qt = q.transpose(0, 2, 1, 3)
+        kt = kk.transpose(0, 2, 1, 3)
+        vt = vv.transpose(0, 2, 1, 3)
+        if amm is None:
+            from ..kernels import flash_attention
+            out = flash_attention(qt, kt, vt, causal=causal)
+        else:
+            out = _flash_amm_ste(amm, causal, qt, kt, vt)
         out = out.transpose(0, 2, 1, 3)
     else:
+        if use_pallas:
+            if s > _FLASH_SEQ_CAP:
+                _flash_fallback(
+                    "sequence length exceeds the flash cap",
+                    shape=x.shape, seq=s, cap=_FLASH_SEQ_CAP,
+                    amm="inactive" if amm is None else
+                    f"{amm.cfg.mul}/wl={amm.cfg.wl}")
+            else:
+                _flash_fallback(
+                    "amm family has no flash lowering",
+                    shape=x.shape, seq=s,
+                    amm=f"{amm.cfg.mul}/mode={amm.cfg.mode}")
         if shard_heads and k.shape[2] < q.shape[2]:
             # GQA head sharding: kv_heads (e.g. 8) does not divide the
             # 16-way model axis, which leaves the whole attention replicated

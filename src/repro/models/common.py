@@ -148,6 +148,21 @@ class AmmRuntime:
                 and self.cfg.mul in AMM_BOOTH_KINDS
                 and self.cfg.apply_to in ("attn", "all"))
 
+    @property
+    def attn_lowering(self):
+        """``(wl, vbl, kind)`` of the Booth-family dot-form lowering.
+
+        The static parameters every bitexact attention product lowers
+        with — ``amm_dot``'s vmapped ``bbm_matmul_dynamic``, and the
+        flash-amm kernel's in-tile correction — derived in one place so
+        the two datapaths can never disagree on them.  None when the
+        configured mode/family has no dot-form lowering.
+        """
+        kind = AMM_BOOTH_KINDS.get(self.cfg.mul)
+        if kind is None or self.cfg.mode != "bitexact":
+            return None
+        return (self.cfg.wl, amm_effective_vbl(self.spec), kind)
+
     def precode(self, w):
         """Per-parameter digit-plane cache entry for one (K, N) weight.
 
@@ -281,16 +296,15 @@ def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False):
     schedule.
     """
     exact = a @ b
-    cfg = rt.cfg
-    kind = AMM_BOOTH_KINDS.get(cfg.mul)
-    if cfg.mode != "bitexact" or kind is None:
+    lowering = rt.attn_lowering
+    if lowering is None:
         return exact
     if oracle:
         from ..kernels.ref import amm_dot_ref
         approx = amm_dot_ref(a, b, rt.spec)
     else:
-        vbl = amm_effective_vbl(rt.spec)
-        fn = partial(bbm_matmul_dynamic, wl=cfg.wl, vbl=vbl, kind=kind)
+        wl, vbl, kind = lowering
+        fn = partial(bbm_matmul_dynamic, wl=wl, vbl=vbl, kind=kind)
         for _ in range(a.ndim - 2):
             fn = jax.vmap(fn)
         approx = fn(a, b)

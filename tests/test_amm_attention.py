@@ -9,8 +9,10 @@ closed-form oracles (``kernels.ref.amm_attention_ref`` /
 ``amm_decode_attention_ref``) across wl x vbl x kind, pins the
 ``apply_to`` routing (attention exact under "mlp" — the pre-routing code
 path — and MLPs exact under "attn"), checks decode-vs-prefill cache
-parity at the LM level, and verifies the flash-kernel fallback rule
-(``use_pallas`` is a no-op while amm attention is active).
+parity at the LM level, and verifies the flash-amm routing:
+``use_pallas`` with amm attention active selects the flash-amm lowering
+(kernels/flash_attention.py), bit-identical to the chunked schedule at
+the flash tile sizes (the full contract lives in tests/test_flash_amm.py).
 """
 import dataclasses
 
@@ -143,10 +145,14 @@ def test_amm_attention_actually_differs_from_exact():
     assert np.max(np.abs(exact - approx)) < 0.05   # still an approximation
 
 
-# --------------------------------------------------------- flash fallback
-def test_flash_fallback_bitwise_under_amm():
-    """use_pallas has no amm lowering: with amm active the wrapper must
-    take the chunked path, bitwise-identically to use_pallas=False."""
+# --------------------------------------------------------- flash routing
+def test_flash_amm_route_selected_under_amm(monkeypatch):
+    """use_pallas with amm attention active selects the flash-amm lowering
+    (the old behavior — silently falling back to the chunked path — is
+    gone), and its output is bit-identical to the chunked schedule run at
+    the flash tile sizes with KV heads repeated (the equality contract;
+    tests/test_flash_amm.py sweeps it at the kernel level)."""
+    from repro.models.attention import flash_amm_chunked_equiv
     cfg = reduced(get_arch("qwen2-0.5b"))
     cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
                                                  wl=16, param=13,
@@ -155,11 +161,30 @@ def test_flash_fallback_bitwise_under_amm():
     x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
     positions = jnp.arange(16)[None, :] * jnp.ones((2, 1), jnp.int32)
     rt = AmmRuntime.build(cfg.amm)
+    called = []
+    orig = attention_mod._flash_amm_ste
+
+    def spy(amm, causal, q, k, v):
+        called.append(True)
+        return orig(amm, causal, q, k, v)
+
+    monkeypatch.setattr(attention_mod, "_flash_amm_ste", spy)
     y_pl, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
                         amm=rt)
-    y_js, _ = attention(p, x, cfg, positions=positions, use_pallas=False,
-                        amm=rt)
-    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_js))
+    assert called, "use_pallas + active amm must take the flash-amm route"
+
+    # reference: repeat KV heads (as the route does), then the chunked
+    # schedule at flash tiles — bitwise equal per the flash-amm contract
+    def chunked_ref(pp, xx, *, positions):
+        def fake_flash(amm, causal, q, k, v):
+            return flash_amm_chunked_equiv(q, k, v, amm, causal=causal)
+        monkeypatch.setattr(attention_mod, "_flash_amm_ste", fake_flash)
+        out, _ = attention(pp, xx, cfg, positions=positions,
+                           use_pallas=True, amm=rt)
+        return out
+
+    y_ref = chunked_ref(p, x, positions=positions)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_ref))
 
 
 # ------------------------------------------------------- apply_to routing

@@ -1,0 +1,269 @@
+"""Flash-amm contract suite: the Broken-Booth datapath inside the flash
+online-softmax tile arithmetic (kernels/flash_attention.py).
+
+The load-bearing claim is *bitwise* equality against the chunked-amm
+schedule at matched head counts and tile sizes
+(``models.attention.flash_amm_chunked_equiv``): quantization is per
+block, so same blocking + same quantizer + same float op order must give
+``assert_array_equal``, not allclose.  Both lowerings of the shared tile
+step are held to it — the Pallas kernel (interpret mode on CPU CI) and
+the fused XLA scan that serves as the off-TPU fast path — across
+wl x vbl x kind with envelope-edge operands, causal and noncausal
+masking, and a padded (ragged) final KV block.  Routing pins: amm-active
+``use_pallas`` selects flash-amm, ``apply_to="mlp"`` still selects
+exact-flash, and falling off the flash path emits a structured
+``FlashFallbackWarning``.  Gradients: the flash-amm ``custom_vjp``
+backward is the chunked path's straight-through rule, bit-identical.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AmmConfig, get_arch, reduced
+from repro.core.multipliers import MulSpec
+from repro.kernels.bbm_matmul import bbm_matmul_scaled, dot_scaled_chunked
+from repro.kernels.booth_rows import (amm_chunk_len, booth_precode,
+                                      f32_exact_chunk_len)
+from repro.kernels.flash_attention import flash_attention_amm
+from repro.kernels.ref import (AMM_BOOTH_KINDS, amm_effective_vbl,
+                               amm_flash_attention_ref, amm_quantize)
+from repro.models import attention as attention_mod
+from repro.models.attention import (FlashFallbackWarning, attention,
+                                    attn_table, flash_amm_chunked_equiv)
+from repro.models.common import AmmRuntime, init_params
+
+RNG = np.random.default_rng(31)
+
+# same Booth-family cells as tests/test_amm_attention.py: both word
+# lengths x both truncation kinds, the exact multiplier (vbl=0), and the
+# single-digit-chunk point (16, 3) whose products cross chunk boundaries
+SWEEP = [("bbm0", 8, 5), ("bbm1", 8, 7), ("bbm0", 12, 7), ("bbm1", 12, 11),
+         ("bbm0", 16, 13), ("bbm1", 16, 15), ("bbm0", 16, 3),
+         ("booth", 16, 0)]
+
+
+def _rt(mul, wl, vbl, apply_to="all", mode="bitexact"):
+    return AmmRuntime.build(AmmConfig(mode=mode, mul=mul, wl=wl, param=vbl,
+                                      apply_to=apply_to))
+
+
+def _lowering(mul, wl, vbl):
+    return wl, (0 if mul == "booth" else vbl), AMM_BOOTH_KINDS[mul]
+
+
+def _qkv(b=1, h=2, sq=40, skv=40, d=16, seed=3):
+    """(B, H, S, D) operands with envelope-edge rows (quantize to +lim)."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, sq, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, skv, d)).astype(np.float32)
+    v = rng.standard_normal((b, h, skv, d)).astype(np.float32)
+    q[0, 0, 0, :] = np.abs(q).max() * 1.5
+    k[0, 0, 0, :] = np.abs(k).max() * 1.5
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+def _chunked_ref(q, k, v, rt, *, causal, bq, bk):
+    """Chunked-amm at explicit tile sizes, (B, H, S, D) layout."""
+    from repro.models.attention import chunked_attention
+    out = chunked_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            bq=bq, bk=bk, amm=rt)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ------------------------------------------------- in-kernel correction
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_dot_scaled_chunked_matches_scaled(mul, wl, vbl):
+    """The kernel-safe chunked contraction (static python loop, optional
+    exact-f32-envelope gemms) == the jitted scan entry point, bitwise,
+    for single- and multi-chunk K."""
+    wl_, vbl_, kind = _lowering(mul, wl, vbl)
+    rng = np.random.default_rng(17)
+    chunk = amm_chunk_len(wl_, vbl_)
+    for kk in (16, min(2 * chunk + 5, 200)):
+        a = rng.standard_normal((8, kk)).astype(np.float32)
+        b = rng.standard_normal((kk, 12)).astype(np.float32)
+        a[0, :] = np.abs(a).max() * 1.5
+        aq, _ = amm_quantize(jnp.asarray(a), wl_)
+        bq, _ = amm_quantize(jnp.asarray(b), wl_)
+        mag, neg = booth_precode(bq, wl_)
+        ref = bbm_matmul_scaled(aq, mag, neg, wl=wl_, vbl=vbl_, kind=kind)
+        for f32_dots in (False, True):
+            got = dot_scaled_chunked(aq, mag, neg, wl=wl_, vbl=vbl_,
+                                     kind=kind, f32_dots=f32_dots)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_f32_exact_envelope_is_tighter_than_int32():
+    """The f32 chunk is a subset of the int32 chunk (budget 2^24 vs
+    2^31-1) and vanishes exactly where one product already overflows it."""
+    for wl in (8, 12, 16):
+        for vbl in range(0, wl):
+            assert f32_exact_chunk_len(wl, vbl) <= amm_chunk_len(wl, vbl)
+    assert f32_exact_chunk_len(16, 6) == 0      # 2^(31-6) > 2^24: no envelope
+    assert f32_exact_chunk_len(16, 13) > 0
+    assert f32_exact_chunk_len(8, 5) > 0
+
+
+# --------------------------------------------------- bitwise equality
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_flash_amm_matches_chunked(mul, wl, vbl, use_kernel):
+    """The headline contract: flash-amm == chunked-amm bitwise at matched
+    tiles, for both lowerings of the tile step.  S=40 with 16-wide tiles
+    also exercises the padded (ragged) final Q and KV blocks."""
+    wl_, vbl_, kind = _lowering(mul, wl, vbl)
+    q, k, v = _qkv()
+    ref = _chunked_ref(q, k, v, _rt(mul, wl, vbl), causal=True, bq=16, bk=16)
+    got = flash_attention_amm(q, k, v, wl=wl_, vbl=vbl_, kind=kind,
+                              causal=True, bq=16, bk=16,
+                              use_kernel=use_kernel,
+                              interpret=True if use_kernel else None)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_amm_noncausal_and_ragged_kv(causal):
+    """Rectangular Sq != Skv with a partial final KV block (skv=25,
+    bk=16): the masking and explicit zero-padding must agree with the
+    chunked path under both masks."""
+    q, k, v = _qkv(sq=12, skv=25)
+    rt = _rt("bbm0", 16, 13)
+    ref = _chunked_ref(q, k, v, rt, causal=causal, bq=16, bk=16)
+    for use_kernel in (False, True):
+        got = flash_attention_amm(q, k, v, wl=16, vbl=13, kind=0,
+                                  causal=causal, bq=16, bk=16,
+                                  use_kernel=use_kernel,
+                                  interpret=True if use_kernel else None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_flash_amm_matches_scalar_oracle():
+    """Transitivity check at default (128) tiles: flash-amm == the scalar
+    closed-form oracle ``amm_flash_attention_ref`` (which runs the
+    chunked schedule with every product through ``core.multipliers``)."""
+    q, k, v = _qkv(sq=24, skv=24)
+    for mul, wl, vbl in (("bbm0", 16, 13), ("bbm1", 8, 7)):
+        wl_, vbl_, kind = _lowering(mul, wl, vbl)
+        got = flash_attention_amm(q, k, v, wl=wl_, vbl=vbl_, kind=kind,
+                                  causal=True, use_kernel=False)
+        ref = amm_flash_attention_ref(q, k, v, MulSpec(mul, wl, vbl),
+                                      causal=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_flash_amm_decode_shape_smoke():
+    """A single-query call (the decode tile shape, bq=1) runs on both
+    lowerings and matches the chunked path bitwise."""
+    q, k, v = _qkv(sq=1, skv=33)
+    rt = _rt("bbm0", 16, 13)
+    ref = _chunked_ref(q, k, v, rt, causal=False, bq=16, bk=16)
+    for use_kernel in (False, True):
+        got = flash_attention_amm(q, k, v, wl=16, vbl=13, kind=0,
+                                  causal=False, bq=16, bk=16,
+                                  use_kernel=use_kernel,
+                                  interpret=True if use_kernel else None)
+        assert got.shape == q.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ------------------------------------------------------------- routing
+def _attn_setup(apply_to):
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, amm=AmmConfig(mode="bitexact", mul="bbm0",
+                                                 wl=16, param=13,
+                                                 apply_to=apply_to))
+    p = init_params(attn_table(cfg), jax.random.key(0))
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    positions = jnp.arange(16)[None, :] * jnp.ones((2, 1), jnp.int32)
+    return cfg, p, x, positions, AmmRuntime.build(cfg.amm)
+
+
+def test_apply_to_mlp_still_selects_exact_flash(monkeypatch):
+    """Routing pin: under apply_to="mlp" attention is not amm-active, the
+    transformer gate passes amm=None, and use_pallas selects the *exact*
+    flash kernel — bit-identical to an explicit amm=None call, with the
+    flash-amm route never entered."""
+    cfg, p, x, positions, rt = _attn_setup("mlp")
+    assert rt.attn_active is False
+    gated = rt if rt.attn_active else None     # the transformer's gate
+
+    entered = []
+    orig = attention_mod._flash_amm_ste
+    monkeypatch.setattr(
+        attention_mod, "_flash_amm_ste",
+        lambda *a: (entered.append(True), orig(*a))[1])
+    y_gated, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
+                           amm=gated)
+    y_exact, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
+                           amm=None)
+    assert not entered
+    np.testing.assert_array_equal(np.asarray(y_gated), np.asarray(y_exact))
+
+
+def test_ste_gradient_parity_with_chunked():
+    """The flash-amm backward *is* the chunked path's straight-through
+    gradient (custom_vjp over ``flash_amm_chunked_equiv``): grads agree
+    bitwise, and the forwards they differentiate are bitwise equal too."""
+    from repro.models.attention import _flash_amm_ste
+    q, k, v = _qkv(sq=24, skv=24, d=8)
+    rt = _rt("bbm0", 16, 13)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.square(_flash_amm_ste(rt, True, q, k, v)))
+
+    def loss_chunked(q, k, v):
+        return jnp.sum(jnp.square(
+            flash_amm_chunked_equiv(q, k, v, rt, causal=True)))
+
+    lf, gf = jax.value_and_grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    lc, gc = jax.value_and_grad(loss_chunked, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lc))
+    for a, b in zip(gf, gc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.isfinite(np.asarray(a)).all()
+
+
+# --------------------------------------------------- fallback warnings
+def test_seq_cap_fallback_warns_with_context(monkeypatch):
+    """Above the flash sequence cap the call lands on the chunked path
+    with a FlashFallbackWarning naming shape, amm state and cap — not
+    silently (the old behavior this replaces)."""
+    cfg, p, x, positions, rt = _attn_setup("all")
+    monkeypatch.setattr(attention_mod, "_FLASH_SEQ_CAP", 8)
+    with pytest.warns(FlashFallbackWarning) as rec:
+        y_pl, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
+                            amm=rt)
+    msg = str(rec[0].message)
+    assert "cap" in msg and "seq=16" in msg and "bbm0" in msg
+    y_js, _ = attention(p, x, cfg, positions=positions, use_pallas=False,
+                        amm=rt)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_js))
+
+
+def test_no_lowering_fallback_warns(monkeypatch):
+    """An amm runtime without a dot-form lowering (mode="noise") cannot
+    ride the flash path: warn with the family/mode, fall back chunked."""
+    cfg, p, x, positions, _ = _attn_setup("all")
+    rt = _rt("bbm0", 16, 13, mode="noise")
+    assert rt.attn_lowering is None
+    with pytest.warns(FlashFallbackWarning, match="no flash lowering"):
+        y_pl, _ = attention(p, x, cfg, positions=positions, use_pallas=True,
+                            amm=rt)
+    y_js, _ = attention(p, x, cfg, positions=positions, use_pallas=False,
+                        amm=rt)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_js))
+
+
+def test_in_cap_flash_route_does_not_warn():
+    """The happy path emits nothing — the warning is a fallback signal,
+    not a use_pallas tax."""
+    cfg, p, x, positions, rt = _attn_setup("all")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", FlashFallbackWarning)
+        attention(p, x, cfg, positions=positions, use_pallas=True, amm=rt)
