@@ -5,6 +5,8 @@ from .bam import bam_mul
 from .kulkarni import kulkarni_mul
 from .multipliers import EXACT, MULTIPLIERS, MulSpec, mul
 from .errstats import ErrorStats, characterize, error_histogram
+from .faults import FaultSpec, apply_acc_fault, apply_plane_faults
+from .guards import GuardConfig, GuardReport
 from .noise import NoiseModel, inject_dot_error, make_noise_model
 
 __all__ = [
@@ -12,5 +14,7 @@ __all__ = [
     "bbm_mul", "bbm_type0", "bbm_type1", "bam_mul", "kulkarni_mul",
     "EXACT", "MULTIPLIERS", "MulSpec", "mul",
     "ErrorStats", "characterize", "error_histogram",
+    "FaultSpec", "apply_acc_fault", "apply_plane_faults",
+    "GuardConfig", "GuardReport",
     "NoiseModel", "inject_dot_error", "make_noise_model",
 ]

@@ -1,0 +1,165 @@
+"""Keyed, deterministic hardware-fault injection for the Broken-Booth
+datapath.
+
+The paper trades *controlled* error for power; a deployment also sees
+*uncontrolled* error — silicon defects and transient upsets — and the
+approximate-multiplier literature evaluates designs under exactly those
+(Masadeh et al.; Wu et al., "A Survey on Approximate Multiplier Designs
+for Energy Efficiency").  This module is the software half of that axis:
+a ``FaultSpec`` names a fault site, model and rate, and every mask it
+draws is a pure function of ``(spec.seed, site indices)`` via
+``jax.random`` — the same spec injects the *same* faults into the
+dot-form datapath (``kernels.bbm_matmul``) and the scalar oracle
+(``kernels.ref``), which is what keeps fault-injected dot-vs-oracle
+equality ``assert_array_equal``, the repo's contract idiom.
+
+Fault sites (``target``):
+
+  "plane"  the radix-4 Booth digit planes of the multiplier operand —
+           the partial-product generator's control lines.  Each digit is
+           three stored bits: the magnitude select ``(mag_lo, mag_hi)``
+           (one-hot-ish code for {0, A, 2A}) and the sign flag ``neg``.
+           ``lane`` picks which line is faulty; ``rows`` restricts the
+           site to the truncated correction rows (``"corr"`` — the rows
+           the VBL nullification already degrades) or all rows.  A fault
+           that drives the select to the unused ``11`` code resolves to
+           the 2A line (the select saturates), so faulted planes stay in
+           the decode domain every accumulate form understands.
+
+  "acc"    one bit of the int32 accumulator: the per-chunk partial sum
+           of the scaled contraction is XORed with a keyed rate-``p``
+           mask at bit ``bit`` — a transient upset in the adder tree.
+           Keyed per (chunk index, output element), so the dot form's
+           ``lax.scan`` chunks and the oracle's python chunk loop draw
+           identical masks.
+
+Fault models (``model``):
+
+  "flip"    transient: each cell flips independently with rate ``p``
+  "stuck0"  defect: a keyed fraction ``p`` of cells reads 0 permanently
+  "stuck1"  defect: a keyed fraction ``p`` of cells reads 1 permanently
+
+``FaultSpec()`` (rate 0) is the no-fault spec: every application is a
+no-op and the datapath is bit-identical to the unfaulted one — pinned by
+tests/test_faults.py.  The dataclass is frozen/hashable so it can ride
+jit static argnames.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FaultSpec", "apply_acc_fault", "apply_plane_faults",
+           "plane_fault_mask"]
+
+_LANES = ("mag_lo", "mag_hi", "neg", "all")
+_MODELS = ("flip", "stuck0", "stuck1")
+_TARGETS = ("plane", "acc")
+_ROWS = ("all", "corr")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault site + model + rate, deterministically keyed by ``seed``."""
+    target: str = "plane"     # "plane" | "acc"
+    model: str = "flip"       # "flip" | "stuck0" | "stuck1"
+    p: float = 0.0            # fault rate (flip) / defect coverage (stuck)
+    lane: str = "all"         # plane: "mag_lo" | "mag_hi" | "neg" | "all"
+    rows: str = "all"         # plane: "all" | "corr" (truncated rows only)
+    bit: int = 12             # acc: accumulator bit the upset lands on
+    seed: int = 0             # keys every mask draw
+
+    def __post_init__(self):
+        if self.target not in _TARGETS:
+            raise ValueError(f"unknown fault target {self.target!r}")
+        if self.model not in _MODELS:
+            raise ValueError(f"unknown fault model {self.model!r}")
+        if self.lane not in _LANES:
+            raise ValueError(f"unknown plane lane {self.lane!r}")
+        if self.rows not in _ROWS:
+            raise ValueError(f"unknown row selector {self.rows!r}")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1], got {self.p}")
+        if not 0 <= self.bit < 31:
+            raise ValueError(f"accumulator bit must be in [0, 31), "
+                             f"got {self.bit}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.p > 0.0
+
+
+def _key(spec: FaultSpec, *folds: int):
+    k = jax.random.key(spec.seed)
+    for f in folds:
+        k = jax.random.fold_in(k, f)
+    return k
+
+
+def plane_fault_mask(spec: FaultSpec, shape, lane_idx: int):
+    """Boolean fault-site mask for one plane bit-lane, keyed and pure.
+
+    The draw depends only on ``(spec.seed, lane_idx, shape)`` — never on
+    the data — so the datapath and the oracle, handed the same spec and
+    the same (wl//2, K, N) plane shape, fault the same cells.
+    """
+    return jax.random.bernoulli(_key(spec, 17, lane_idx), spec.p, shape)
+
+
+def _fault_bit(bitval, mask, model: str):
+    """Apply one fault model to a 0/1 bit plane at the masked cells."""
+    if model == "flip":
+        return jnp.where(mask, 1 - bitval, bitval)
+    if model == "stuck0":
+        return jnp.where(mask, 0, bitval)
+    return jnp.where(mask, 1, bitval)       # stuck1
+
+
+def apply_plane_faults(mag, neg, spec: FaultSpec | None, *, vbl: int = 0):
+    """Faulted ``(mag, neg)`` digit planes; identity for a disabled spec.
+
+    ``mag``/``neg`` are ``booth_precode`` planes of shape
+    ``(wl//2, ...)``.  The stored encoding is faulted per bit-lane
+    (``mag_lo``, ``mag_hi``, ``neg``); a select driven to the unused
+    ``11`` magnitude code saturates to the 2A line (``mag = 2``), so the
+    result stays inside the {0, 1, 2} x {0, 1} domain the accumulate
+    forms and ``_MOD_BRANCHES`` enumerate.  ``rows="corr"`` confines the
+    site to the ``ceil(vbl/2)`` truncated correction rows (pass the
+    operating ``vbl``); rows above them stay clean.
+    """
+    if spec is None or not spec.enabled or spec.target != "plane":
+        return mag, neg
+    mag_lo, mag_hi = mag & 1, (mag >> 1) & 1
+    lanes = {"mag_lo": mag_lo, "mag_hi": mag_hi, "neg": neg}
+    for i, name in enumerate(("mag_lo", "mag_hi", "neg")):
+        if spec.lane not in (name, "all"):
+            continue
+        mask = plane_fault_mask(spec, jnp.shape(mag), i)
+        if spec.rows == "corr":
+            n_corr = (vbl + 1) // 2       # num_corr_rows sans the row cap
+            row_ok = (jnp.arange(jnp.shape(mag)[0]) < n_corr
+                      ).reshape((-1,) + (1,) * (len(jnp.shape(mag)) - 1))
+            mask = mask & row_ok
+        lanes[name] = _fault_bit(lanes[name], mask, spec.model)
+    new_mag = jnp.minimum(lanes["mag_lo"] + 2 * lanes["mag_hi"], 2)
+    return new_mag.astype(mag.dtype), lanes["neg"].astype(neg.dtype)
+
+
+def apply_acc_fault(acc, spec: FaultSpec | None, chunk_idx: int = 0):
+    """XOR a keyed rate-``p`` upset mask into accumulator bit ``bit``.
+
+    ``acc`` is the int32 per-chunk partial of the scaled contraction;
+    ``chunk_idx`` folds the K-chunk index into the key so every chunk
+    draws independent upsets yet both schedules (the datapath's
+    ``lax.scan`` and the oracle's python loop) draw the *same* ones.
+    Identity for a disabled or non-"acc" spec.  XOR never overflows, so
+    the faulted partial is still a well-defined int32 that both paths
+    cast to float32 identically.
+    """
+    if spec is None or not spec.enabled or spec.target != "acc":
+        return acc
+    mask = jax.random.bernoulli(_key(spec, 23, chunk_idx), spec.p,
+                                jnp.shape(acc))
+    return acc ^ (mask.astype(jnp.int32) << spec.bit)

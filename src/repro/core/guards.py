@@ -1,0 +1,167 @@
+"""Runtime numeric guards for the serving datapath.
+
+The datapath's *static* contracts (the int32 envelope, the wl-bit code
+range) are enforced at trace time where possible; this module adds the
+*runtime* half a deployment needs: checks that run on the actual values
+flowing through a jitted program, plus host-side monitors the serving
+engines consult per flush / per decode step.  Three guard families:
+
+  * finite guards — NaN/Inf detection on outputs (logits, filter
+    samples), with per-row granularity so one poisoned request trips
+    alone (``finite_rows``).
+  * envelope guards — the wl-bit code range and the scaled-accumulator
+    bound, written as ``jax.experimental.checkify`` checks so they
+    survive ``jit`` (a plain python assert on a tracer cannot); run a
+    checked function through ``checkify_call`` and an out-of-envelope
+    value raises on the host with the check's message.
+  * error-budget monitor — compares the approximate output against an
+    exact reference (sampled, the caller decides how often) and trips
+    when the mean absolute error leaves the configured budget: the
+    "accuracy SLO" counterpart of the paper's fixed error analysis.
+
+Every engine-facing check folds into one structured ``GuardReport``
+(which guards ran, which tripped, per-row verdicts), so degradation
+policies — re-serve on the exact datapath, quarantine, fail the
+request — branch on a value, not on string parsing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["GuardConfig", "GuardReport", "checkify_call",
+           "code_range_check", "finite_rows", "guard_rows",
+           "scaled_bound_check"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Which runtime guards an engine runs, and the error budget.
+
+    ``budget_every = 0`` disables the (costly: one extra exact forward)
+    budget audit; ``N > 0`` audits every Nth flush / decode step.  The
+    budget is mean absolute error per audited row against the exact
+    datapath — ``None`` disables even on audited rows.
+    """
+    finite: bool = True
+    envelope: bool = True
+    budget_abs: Optional[float] = None
+    budget_every: int = 0
+
+    @property
+    def budget_active(self) -> bool:
+        return self.budget_every > 0 and self.budget_abs is not None
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """Structured verdict of one guarded flush / decode step.
+
+    ``row_ok`` carries the per-row (per-channel / per-slot) verdict the
+    degradation policy acts on; ``tripped`` names every guard that
+    failed ("finite", "budget"); ``nonfinite`` counts bad elements and
+    ``budget_err`` is the worst audited per-row mean absolute error.
+    """
+    ok: bool = True
+    row_ok: Optional[np.ndarray] = None
+    tripped: Tuple[str, ...] = ()
+    nonfinite: int = 0
+    budget_err: Optional[float] = None
+
+    def trip(self, name: str):
+        self.ok = False
+        if name not in self.tripped:
+            self.tripped = self.tripped + (name,)
+
+
+def finite_rows(y) -> np.ndarray:
+    """Per-row finiteness verdict: (rows,) bool, True = every element
+    finite.  ``y`` is host- or device-side, (rows, ...); reduction is
+    over all trailing axes."""
+    arr = np.asarray(y)
+    return np.isfinite(arr).reshape(arr.shape[0], -1).all(axis=-1)
+
+
+def guard_rows(y, cfg: GuardConfig, *, y_exact=None) -> GuardReport:
+    """Run the configured host-side guards over a (rows, ...) output.
+
+    ``y_exact``: exact-datapath reference for the same rows — pass it on
+    audited flushes/steps only (the caller owns the sampling cadence);
+    when present and a budget is configured, rows whose mean absolute
+    error exceeds ``budget_abs`` trip the budget guard.  Returns a
+    ``GuardReport`` whose ``row_ok`` masks the rows a degradation policy
+    should re-serve or fail.
+    """
+    arr = np.asarray(y)
+    rep = GuardReport(row_ok=np.ones(arr.shape[0], bool))
+    if cfg.finite:
+        fin = finite_rows(arr)
+        if not fin.all():
+            rep.trip("finite")
+            rep.nonfinite = int((~np.isfinite(arr)).sum())
+            rep.row_ok &= fin
+    if y_exact is not None and cfg.budget_abs is not None:
+        ref = np.asarray(y_exact, np.float64)
+        err = np.abs(arr.astype(np.float64) - ref)
+        per_row = err.reshape(err.shape[0], -1).mean(axis=-1)
+        # a non-finite row already tripped above; keep the budget verdict
+        # meaningful for the finite rows
+        per_row = np.where(np.isfinite(per_row), per_row, np.inf)
+        rep.budget_err = float(per_row.max())
+        over = per_row > cfg.budget_abs
+        if over.any():
+            rep.trip("budget")
+            rep.row_ok &= ~over
+    return rep
+
+
+# ------------------------------------------------- checkify-wired (in-jit)
+def code_range_check(codes, wl: int, what: str = "codes"):
+    """In-jit guard: every quantized code inside the signed wl-bit range.
+
+    A ``checkify.check``, so it survives ``jit``: call inside the traced
+    function and run it through ``checkify_call``.  The quantizer clips,
+    so a trip means the datapath was handed codes it never produced —
+    a corrupted cache entry, a fault-injection overreach, an integration
+    bug.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import checkify
+    lim = 1 << (wl - 1)
+    # wl/lim are static python ints — bake them into the message (checkify
+    # format args must be arrays)
+    checkify.check(jnp.all((codes >= -lim) & (codes < lim)),
+                   f"{what} outside the signed {wl}-bit envelope "
+                   f"[{-lim}, {lim - 1}]")
+
+
+def scaled_bound_check(acc, bound: int, what: str = "accumulator"):
+    """In-jit guard: |scaled partial| within the dot form's int32 bound.
+
+    ``bound`` is ``booth_rows.dotform_scaled_bound`` (or any caller
+    bound); the check fires when the accumulator leaves it — the runtime
+    counterpart of the static envelope assertion, catching what static
+    analysis cannot (faulted planes, corrupted codes).
+    """
+    import jax.numpy as jnp
+    from jax.experimental import checkify
+    checkify.check(jnp.max(jnp.abs(acc)) <= bound,
+                   f"{what} left the int32 envelope (bound {int(bound)})")
+
+
+def checkify_call(fn, *args, **kwargs):
+    """Run ``fn`` (which may contain checkify checks) under jit and raise
+    any tripped check on the host.
+
+    ``checkify.checkify`` functionalizes the checks into an error value
+    that flows through jit; ``throw()`` re-raises it host-side — the
+    piece that makes the envelope guards usable from a serving loop
+    around compiled steps.  Returns ``fn``'s output when no check trips.
+    """
+    import jax
+    from jax.experimental import checkify
+    err, out = jax.jit(checkify.checkify(fn))(*args, **kwargs)
+    err.throw()
+    return out

@@ -53,6 +53,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.booth import num_pp_rows
+from ..core.faults import apply_acc_fault, apply_plane_faults
 from .booth_rows import (amm_chunk_len, bbm_rows_product_precoded,
                          booth_high_value, booth_precode,
                          f32_exact_chunk_len, num_corr_rows, resolve_form,
@@ -188,8 +189,9 @@ def _matmul_dotform(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
     return acc
 
 
-@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind"))
-def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
+@functools.partial(jax.jit, static_argnames=("wl", "vbl", "kind", "fault"))
+def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0,
+                      fault=None):
     """``sum_k bbm(x[m,k], w[k,n])`` as float32, any K — the amm datapath.
 
     The model-scale entry point behind ``amm_dense`` mode="bitexact":
@@ -205,22 +207,34 @@ def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
 
     x: (M, K) int32 codes; wmag/wneg: (wl//2, K, N) planes from
     ``booth_precode``.  Returns float32 (M, N) at full product scale.
+
+    fault: optional ``core.faults.FaultSpec`` (static).  "plane" faults
+    hit the weight digit planes *before* the chunk split (mask shape =
+    the caller's (wl//2, K, N) planes, so the scalar oracle
+    ``ref.amm_faulty_ref`` faults the same cells); "acc" faults XOR a
+    keyed upset into each chunk's int32 partial, folded by chunk index —
+    the same draws the oracle's python chunk loop makes.  ``None`` (and
+    any disabled spec) traces the identical program as before.
     """
     mm, kk = x.shape
     n_rows, kk2, nn = wmag.shape
     if wmag.shape != wneg.shape or n_rows != num_pp_rows(wl) or kk != kk2:
         raise ValueError(f"digit planes {wmag.shape}/{wneg.shape} do not "
                          f"match wl={wl}, K={kk}")
+    wmag, wneg = apply_plane_faults(wmag, wneg, fault, vbl=vbl)
     _, x_s = split_signed(x, wl)
     chunk = amm_chunk_len(wl, vbl)
     scale = float(1 << vbl)
     if kk <= chunk:
-        return _dot_scaled(x_s, wmag, wneg, wl=wl, vbl=vbl,
-                           kind=kind).astype(jnp.float32) * scale
+        acc = _dot_scaled(x_s, wmag, wneg, wl=wl, vbl=vbl, kind=kind)
+        acc = apply_acc_fault(acc, fault, 0)
+        return acc.astype(jnp.float32) * scale
     n_chunks = -(-kk // chunk)
     pad = n_chunks * chunk - kk
     # zero codes decode to all-zero digits (mag 0, neg 0): every padded
     # column contributes 0 to every contraction, so padding is exact
+    # (plane faults were applied above, on the caller's unpadded planes —
+    # padded columns are clean zeros and still contribute nothing)
     x_s = jnp.pad(x_s, ((0, 0), (0, pad)))
     wmag = jnp.pad(wmag, ((0, 0), (0, pad), (0, 0)))
     wneg = jnp.pad(wneg, ((0, 0), (0, pad), (0, 0)))
@@ -229,12 +243,13 @@ def bbm_matmul_scaled(x, wmag, wneg, *, wl: int, vbl: int, kind: int = 0):
     wnc = wneg.reshape(n_rows, n_chunks, chunk, nn).transpose(1, 0, 2, 3)
 
     def body(acc, xs):
-        xi, mi, ni = xs
+        ci, xi, mi, ni = xs
         part = _dot_scaled(xi, mi, ni, wl=wl, vbl=vbl, kind=kind)
+        part = apply_acc_fault(part, fault, ci)
         return acc + part.astype(jnp.float32), None
 
     acc, _ = jax.lax.scan(body, jnp.zeros((mm, nn), jnp.float32),
-                          (xc, wmc, wnc))
+                          (jnp.arange(n_chunks), xc, wmc, wnc))
     return acc * scale
 
 
@@ -280,7 +295,8 @@ def dot_scaled_chunked(x, wmag, wneg, *, wl: int, vbl: int, kind: int,
     return acc * scale
 
 
-def bbm_matmul_dynamic(a, b, *, wl: int, vbl: int, kind: int = 0):
+def bbm_matmul_dynamic(a, b, *, wl: int, vbl: int, kind: int = 0,
+                       fault=None):
     """Both-operands-dynamic Broken-Booth matmul — the attention entry point.
 
     ``bbm_matmul_scaled`` contracts quantized codes against a *precoded*
@@ -308,11 +324,17 @@ def bbm_matmul_dynamic(a, b, *, wl: int, vbl: int, kind: int = 0):
     context* — both sides of a comparison must be traced the same way,
     which the shared attention schedule guarantees and an extra jit
     boundary here would break.
+
+    fault: optional ``core.faults.FaultSpec`` forwarded to
+    ``bbm_matmul_scaled`` — hardware-fault injection on the ``b``-side
+    digit planes / the chunk accumulator, oracled by
+    ``ref.amm_faulty_ref`` (bit-identical under the same spec).
     """
     aq, s_a = amm_quantize(a, wl)
     bq, s_b = amm_quantize(b, wl)
     mag, neg = booth_precode(bq, wl)
-    yq = bbm_matmul_scaled(aq, mag, neg, wl=wl, vbl=vbl, kind=kind)
+    yq = bbm_matmul_scaled(aq, mag, neg, wl=wl, vbl=vbl, kind=kind,
+                           fault=fault)
     return (yq * (s_a * s_b)).astype(a.dtype)
 
 

@@ -73,10 +73,10 @@ from ..core.booth import num_pp_rows
 
 __all__ = ["amm_chunk_len", "bbm_rows_product", "bbm_rows_product_precoded",
            "bbm_rows_product_dotform", "booth_correction",
-           "booth_high_value", "booth_precode", "booth_value",
-           "dotform_scaled_bound", "f32_exact_chunk_len", "num_corr_rows",
-           "resolve_form", "scaled_trunc_rows", "signed_digit",
-           "split_signed"]
+           "booth_high_value", "booth_precode", "booth_precode_faulty",
+           "booth_value", "dotform_scaled_bound", "f32_exact_chunk_len",
+           "num_corr_rows", "resolve_form", "scaled_trunc_rows",
+           "signed_digit", "split_signed"]
 
 
 def split_signed(x, wl: int):
@@ -110,6 +110,23 @@ def booth_precode(bu, wl: int):
         mags.append(jnp.abs(d))
         negs.append(b_hi)
     return jnp.stack(mags), jnp.stack(negs)
+
+
+def booth_precode_faulty(bu, wl: int, fault=None, *, vbl: int = 0):
+    """Decode phase with hardware faults injected into the digit planes.
+
+    ``booth_precode`` followed by ``core.faults.apply_plane_faults`` —
+    the injection hook every consumer of precoded planes shares, so the
+    dot-form datapath, the scalar oracle and a faulted ``PrecodedBank``
+    all derive *the same* faulted planes from the same ``FaultSpec``
+    (keyed masks depend only on the spec and the plane shape).  A
+    ``None``/disabled/non-"plane" spec returns the clean decode
+    bit-identically.  ``vbl`` scopes ``rows="corr"`` faults to the
+    truncated correction rows of the operating point.
+    """
+    from ..core.faults import apply_plane_faults
+    mag, neg = booth_precode(bu, wl)
+    return apply_plane_faults(mag, neg, fault, vbl=vbl)
 
 
 def bbm_rows_product_precoded(a_s, mag, neg, *, wl: int, vbl: int, kind: int,

@@ -5,13 +5,14 @@ import jax
 import jax.numpy as jnp
 
 from ..core.bbm import bbm_type0, bbm_type1
+from ..core.faults import apply_acc_fault
 from ..core.multipliers import MulSpec, mul as core_mul
 from .booth_rows import amm_chunk_len
 
 __all__ = ["amm_approx_ref", "amm_attention_ref", "amm_decode_attention_ref",
-           "amm_dense_ref", "amm_dot_ref", "amm_flash_attention_ref",
-           "amm_quantize", "bbm_matmul_ref", "fir_bank_ref",
-           "quant_matmul_ref", "attention_ref"]
+           "amm_dense_ref", "amm_dot_ref", "amm_faulty_ref",
+           "amm_flash_attention_ref", "amm_quantize", "bbm_matmul_ref",
+           "fir_bank_ref", "quant_matmul_ref", "attention_ref"]
 
 # Booth-family specs and their closed-form truncation kind; every other
 # multiplier family has no dot-form lowering and keeps the scalar path
@@ -99,6 +100,58 @@ def amm_approx_ref(x, w, spec: MulSpec):
             yq = yq * float(1 << vbl)
     else:
         yq = jnp.sum(prod.astype(jnp.float32), axis=-2)
+    return (yq * (s_x * s_w)).astype(x.dtype)
+
+
+def amm_faulty_ref(x, w, spec: MulSpec, fault=None):
+    """Scalar oracle of the *fault-injected* dot-form datapath.
+
+    Mirrors ``bbm_matmul_dynamic(..., fault=)`` product for product:
+    quantize both operands (shared ``amm_quantize``), Booth-decode the
+    multiplier operand and fault its digit planes
+    (``booth_rows.booth_precode_faulty`` — the keyed masks depend only on
+    the ``FaultSpec`` and the (wl//2, K, N) plane shape, so the datapath
+    faults the same cells), form every scalar product through the
+    per-element precoded closed form (the (..., K, N) grid that makes
+    this the oracle), divide by ``2^vbl`` (still exact: the per-row
+    divisibility argument is digit-value-agnostic, so it survives any
+    fault that stays in the decode domain), sum int32-exact per K-chunk
+    with the *same* per-chunk accumulator upsets
+    (``core.faults.apply_acc_fault``, folded by the same chunk index),
+    combine in float32 in chunk order, rescale, descale.  Booth-family
+    specs only (the fault model lives in the Booth decode).  A disabled
+    ``fault`` reduces to the Booth branch of ``amm_approx_ref``
+    bit-for-bit.
+
+    x: (M, K) float, w: (K, N) float — 2-D on purpose: the keyed "acc"
+    masks are drawn at the (M, N) partial shape, which is the datapath's
+    shape only when leading axes are unbatched (vmap callers quantize
+    per slice anyway).
+    """
+    from .booth_rows import bbm_rows_product_precoded, booth_precode_faulty, \
+        split_signed
+    if spec.name not in AMM_BOOTH_KINDS:
+        raise ValueError(f"fault injection needs a Booth-family spec, "
+                         f"not {spec.name!r}")
+    wl = spec.wl
+    vbl = amm_effective_vbl(spec)
+    kind = AMM_BOOTH_KINDS[spec.name]
+    xq, s_x = amm_quantize(x, wl)
+    wq, s_w = amm_quantize(w, wl)
+    mag, neg = booth_precode_faulty(wq, wl, fault, vbl=vbl)
+    _, x_s = split_signed(xq, wl)
+    prod = bbm_rows_product_precoded(
+        x_s[..., :, None], mag, neg, wl=wl, vbl=vbl, kind=kind)  # (M, K, N)
+    scaled = prod >> vbl                      # exact: divisible by 2^vbl
+    k = x.shape[-1]
+    chunk = amm_chunk_len(wl, vbl)
+    yq = jnp.zeros(scaled.shape[:-2] + scaled.shape[-1:], jnp.float32)
+    for ci, lo in enumerate(range(0, k, chunk)):  # chunk order == the scan's
+        part = jnp.sum(scaled[..., lo:lo + chunk, :], axis=-2,
+                       dtype=jnp.int32)
+        part = apply_acc_fault(part, fault, ci)
+        yq = yq + part.astype(jnp.float32)
+    yq = yq * float(1 << vbl)
     return (yq * (s_x * s_w)).astype(x.dtype)
 
 

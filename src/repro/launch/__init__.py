@@ -1,7 +1,42 @@
 """Subsystem package: CLI entry points + shared argparse plumbing."""
 from __future__ import annotations
 
-__all__ = ["add_amm_attn_arg", "resolve_amm_apply_to"]
+__all__ = ["add_amm_attn_arg", "resolve_amm_apply_to",
+           "validate_amm_args"]
+
+
+def validate_amm_args(ap, args) -> None:
+    """Reject invalid (--mul, --wl, --vbl) combinations at parse time.
+
+    Shared by the train and serve launchers so a bad spec fails with one
+    clear message before any params are initialized or caches built —
+    previously an out-of-range VBL surfaced minutes later as a shape
+    error deep in the Booth decode (or, worse, quantized everything to
+    zero and "worked").  Checks mirror the datapath's real envelope:
+
+      * unknown multiplier family (``core.MULTIPLIERS`` registry),
+      * word length: even (radix-4 Booth pairs bits), 4..16 when an
+        approximate mode is on (the int32 dot-form envelope; wl > 16
+        only exists on the exact host FIR path),
+      * VBL: ``0 <= vbl < wl`` for the BBM families (nullifying every
+        bit is no longer a multiplier); kulkarni/bam interpret the knob
+        differently and only require it non-negative.
+    """
+    if args.amm == "off":
+        return
+    from ..core.multipliers import MULTIPLIERS
+    if args.mul not in MULTIPLIERS:
+        ap.error(f"unknown --mul {args.mul!r}; choose from "
+                 f"{sorted(MULTIPLIERS)}")
+    if args.wl % 2 or not 4 <= args.wl <= 16:
+        ap.error(f"--wl {args.wl} out of range: the approximate datapath "
+                 f"needs an even word length in [4, 16] (int32 dot-form "
+                 f"envelope)")
+    if args.vbl < 0:
+        ap.error(f"--vbl {args.vbl} must be non-negative")
+    if args.mul in ("booth", "bbm0", "bbm1") and args.vbl >= args.wl:
+        ap.error(f"--vbl {args.vbl} >= --wl {args.wl}: nullifying every "
+                 f"product bit leaves no multiplier; VBL must be < WL")
 
 
 def add_amm_attn_arg(ap) -> None:

@@ -24,7 +24,8 @@ from ..configs import ARCH_NAMES, get_arch, reduced
 from ..configs.base import AmmConfig
 from ..models import ModelRuntime, lm_init
 from ..serve.engine import Request, Scheduler, make_serve_fns
-from . import add_amm_attn_arg, resolve_amm_apply_to
+from . import (add_amm_attn_arg, resolve_amm_apply_to,
+               validate_amm_args)
 from .mesh import make_host_mesh
 
 
@@ -51,6 +52,7 @@ def main(argv=None):
     add_amm_attn_arg(ap)
     args = ap.parse_args(argv)
     apply_to = resolve_amm_apply_to(ap, args)
+    validate_amm_args(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:

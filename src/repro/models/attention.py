@@ -49,7 +49,8 @@ from .common import Spec, amm_dot, apply_rope, rmsnorm
 
 __all__ = ["attn_table", "mla_table", "attention", "mla_attention",
            "chunked_attention", "decode_attention",
-           "flash_amm_chunked_equiv", "FlashFallbackWarning"]
+           "flash_amm_chunked_equiv", "FlashFallbackWarning",
+           "reset_flash_fallback_dedup"]
 
 NEG_INF = -1e30
 
@@ -64,7 +65,24 @@ class FlashFallbackWarning(UserWarning):
     """A ``use_pallas`` attention call fell back to the chunked path."""
 
 
+# (reason, caller file, caller line) triples that already warned: a decode
+# loop hitting the same fallback every step (or every retrace) says it
+# once, not once per token — repetition adds noise, not information
+_seen_fallbacks: set = set()
+
+
+def reset_flash_fallback_dedup() -> None:
+    """Forget which fallback sites have warned (tests, a new serving run)."""
+    _seen_fallbacks.clear()
+
+
 def _flash_fallback(reason: str, **ctx):
+    import sys
+    f = sys._getframe(2)     # the user call site stacklevel=3 attributes to
+    site = (reason, f.f_code.co_filename, f.f_lineno)
+    if site in _seen_fallbacks:
+        return
+    _seen_fallbacks.add(site)
     detail = ", ".join(f"{k}={v}" for k, v in ctx.items())
     warnings.warn(FlashFallbackWarning(
         f"use_pallas requested but attention fell back to the chunked "

@@ -24,6 +24,7 @@ request index instead of re-deriving them.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -32,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..core.guards import GuardConfig, finite_rows
 from ..models import ModelRuntime, init_cache, lm_amm_planes, lm_apply
 from ..parallel.logical import (RULES, RULES_MULTIPOD, batch_pspec,
                                 is_multipod, spec_to_pspec, tree_shardings)
@@ -151,7 +153,8 @@ class FilterbankEngine:
 
     def __init__(self, h_banks: np.ndarray, spec, *, backend: str = "host",
                  max_channels: int = 64, block: int = 512,
-                 form: Optional[str] = None):
+                 form: Optional[str] = None,
+                 guard: Optional[GuardConfig] = None, max_retries: int = 1):
         from ..dsp.fir import BBM_KINDS, PrecodedBank, fir_apply
         from ..kernels.booth_rows import resolve_form
         h_banks = np.atleast_2d(np.asarray(h_banks, np.float64))
@@ -163,11 +166,12 @@ class FilterbankEngine:
         resolve_form(form)    # fail fast: flush() dispatches before it
         if form == "dot" and (spec.name not in BBM_KINDS or spec.wl > 16):
             # reject at construction what every flush would reject — the
-            # dispatch-before-dequeue contract would otherwise wedge the
-            # queue permanently
+            # whole queue would otherwise drain straight into quarantine
             raise ValueError(f"form='dot' needs a Booth-family spec at "
                              f"wl <= 16, not {spec}")
         self.form = form          # "rows" | "dot" | None (auto: dot)
+        self.guard = guard
+        self.max_retries = max_retries
         self._apply = fir_apply
         # decode phase hoisted out of the serving hot loop: built once here,
         # reused (gathered by request index) across every flush.  Both
@@ -177,6 +181,13 @@ class FilterbankEngine:
         self.bank = PrecodedBank(h_banks, spec)
         self._pending: List[FilterRequest] = []
         self._next_rid = 0
+        self._dispatches = 0      # audit cadence counter (guard.budget_every)
+        # requests the degradation path gave up on: {rid: repr(error)}.
+        # Quarantined, not retried — resubmit explicitly to try again.
+        self.failed: Dict[int, str] = {}
+        self.stats = {"dispatches": 0, "served": 0, "retries": 0,
+                      "bisections": 0, "quarantined": 0, "guard_trips": 0,
+                      "exact_reserves": 0}
 
     def submit(self, signal: np.ndarray, bank: int = 0) -> int:
         """Queue one signal; returns its request id."""
@@ -188,23 +199,117 @@ class FilterbankEngine:
         return rid
 
     def flush(self) -> Dict[int, np.ndarray]:
-        """Serve every pending request; returns {rid: filtered signal}."""
+        """Serve every pending request; returns {rid: filtered signal}.
+
+        Degradation path: a raising backend is retried up to
+        ``max_retries`` times; a batch that still fails is bisected so the
+        poison request ends up alone and is *quarantined* (recorded in
+        ``self.failed``, ejected from the queue) while every healthy
+        request in the same batch is still served.  The queue is dequeued
+        before serving on purpose — the old dispatch-before-dequeue order
+        meant one poison request re-raised out of every future ``flush``
+        and wedged the queue permanently.  With ``guard`` set, per-channel
+        runtime guards run on every flush (finite outputs; sampled error
+        budget vs the exact-Booth datapath) and a tripped channel is
+        transparently re-served on the exact datapath.
+        """
         results: Dict[int, np.ndarray] = {}
         while self._pending:
             batch = self._pending[: self.max_channels]
-            n = max(len(r.signal) for r in batch)
-            x = np.zeros((len(batch), n))
-            for c, r in enumerate(batch):
-                x[c, : len(r.signal)] = r.signal
-            h = self.bank.take([r.bank for r in batch])
-            # dispatch before dequeue: a raising backend leaves the batch
-            # queued so a later flush can still serve it
-            y = self._apply(x, h, self.spec, backend=self.backend,
-                            block=self.block, form=self.form)
+            # dequeue *before* serving: failures below are retried,
+            # bisected, and at worst quarantined — never left to wedge
+            # the queue for every later flush
             self._pending = self._pending[self.max_channels:]
-            for c, r in enumerate(batch):
-                results[r.rid] = y[c, : len(r.signal)]
+            self._serve(batch, results)
         return results
+
+    def _stack(self, batch: List[FilterRequest]) -> np.ndarray:
+        n = max(len(r.signal) for r in batch)
+        x = np.zeros((len(batch), n))
+        for c, r in enumerate(batch):
+            x[c, : len(r.signal)] = r.signal
+        return x
+
+    def _dispatch(self, batch: List[FilterRequest]) -> np.ndarray:
+        """One filterbank call with bounded retry; raises when exhausted."""
+        x = self._stack(batch)
+        h = self.bank.take([r.bank for r in batch])
+        for attempt in range(self.max_retries + 1):
+            self.stats["dispatches"] += 1
+            self._dispatches += 1
+            try:
+                return np.asarray(self._apply(
+                    x, h, self.spec, backend=self.backend, block=self.block,
+                    form=self.form))
+            except Exception:
+                if attempt == self.max_retries:
+                    raise
+                self.stats["retries"] += 1
+
+    def _serve(self, batch: List[FilterRequest],
+               results: Dict[int, np.ndarray]):
+        """Serve one batch with bisection quarantine + runtime guards."""
+        try:
+            y = self._dispatch(batch)
+        except Exception as e:
+            if len(batch) == 1:
+                # the poison request, isolated: eject it instead of
+                # livelocking the engine
+                self.failed[batch[0].rid] = repr(e)
+                self.stats["quarantined"] += 1
+                return
+            # batch bisection: each half retries independently, so the
+            # poison request converges to a singleton and every healthy
+            # neighbour is still served this flush
+            self.stats["bisections"] += 1
+            mid = len(batch) // 2
+            self._serve(batch[:mid], results)
+            self._serve(batch[mid:], results)
+            return
+        bad = self._guard_channels(batch, y)
+        for c, r in enumerate(batch):
+            if c in bad:
+                results[r.rid] = self._reserve_exact(r)
+            else:
+                results[r.rid] = y[c, : len(r.signal)]
+            self.stats["served"] += 1
+
+    def _guard_channels(self, batch: List[FilterRequest],
+                        y: np.ndarray) -> set:
+        """Indices of channels whose runtime guards tripped this dispatch."""
+        if self.guard is None:
+            return set()
+        from ..core.guards import guard_rows
+        y_exact = None
+        if self.guard.budget_active \
+                and self._dispatches % self.guard.budget_every == 0:
+            # sampled accuracy audit: the same batch through the exact
+            # datapath (one extra dispatch on audited flushes only)
+            y_exact = self._exact_batch(batch)
+        rep = guard_rows(y, self.guard, y_exact=y_exact)
+        if rep.ok:
+            return set()
+        bad = {c for c in range(len(batch)) if not rep.row_ok[c]}
+        self.stats["guard_trips"] += len(bad)
+        return bad
+
+    def _exact_spec(self):
+        """Exact-Booth comparand at this engine's word length."""
+        from ..core.multipliers import MulSpec
+        return MulSpec("booth", self.spec.wl, 0)
+
+    def _exact_batch(self, batch: List[FilterRequest]) -> np.ndarray:
+        x = self._stack(batch)
+        h = self.h_banks[[r.bank for r in batch]]
+        return np.asarray(self._apply(x, h, self._exact_spec(),
+                                      backend="host", form=None))
+
+    def _reserve_exact(self, r: FilterRequest) -> np.ndarray:
+        """Serve one guard-tripped request on the exact datapath."""
+        self.stats["exact_reserves"] += 1
+        y = self._apply(r.signal[None, :], self.h_banks[[r.bank]],
+                        self._exact_spec(), backend="host", form=None)
+        return np.asarray(y)[0]
 
 
 @dataclasses.dataclass
@@ -214,13 +319,49 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # degradation-path fields: why the request failed (None = healthy),
+    # an optional per-request deadline in scheduler steps, whether the
+    # output was re-served on the exact datapath after a guard trip
+    error: Optional[str] = None
+    deadline: Optional[int] = None
+    exact: bool = False
+    _pending: List[int] = dataclasses.field(default_factory=list)
+    _steps: int = 0
 
 
 class Scheduler:
-    """Slot-based continuous batching over the jitted decode step."""
+    """Slot-based continuous batching over the jitted decode step.
+
+    Degradation policy (all opt-in, all off on the lean default path):
+
+      * a raising decode step is retried ``max_retries`` times with capped
+        exponential backoff (``backoff`` / ``backoff_cap`` seconds);
+      * if it still raises, each live slot is *probed* one at a time (its
+        token alone, padding elsewhere, against a throwaway cache copy) to
+        identify which request the failure follows — poison requests fail
+        alone (``Request.error`` set, slot recycled) and the surviving
+        slots decode normally the same step.  A failure no probe can
+        attribute re-raises: that is systemic, not a poison request.
+      * with ``guard`` set, per-slot runtime guards run on the step's
+        logits (finite check; sampled error budget vs the exact datapath
+        every ``guard.budget_every`` steps) and a tripped request is
+        re-served from scratch on the *exact* datapath
+        (``AmmConfig.mode="off"``), marked ``Request.exact``;
+      * ``Request.deadline`` bounds how many scheduler steps a request may
+        hold a slot; past it the request fails with error="deadline".
+
+    Retrying a *donating* ``decode_fn`` (launch/serve.py's jitted step
+    donates the caches) requires snapshotting the caches before each call
+    — that copy is the price of the robust path and is only paid when
+    ``max_retries > 0`` or a guard audit needs the pre-step caches.
+    ``stats`` counts steps, retries, probes, failures, guard trips,
+    exact re-serves, deadline expiries, and completions.
+    """
 
     def __init__(self, cfg: ArchConfig, rt: ModelRuntime, params,
-                 batch_slots: int, max_len: int, decode_fn=None):
+                 batch_slots: int, max_len: int, decode_fn=None, *,
+                 guard: Optional[GuardConfig] = None, max_retries: int = 0,
+                 backoff: float = 0.0, backoff_cap: float = 1.0):
         self.cfg, self.rt, self.params = cfg, rt, params
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
@@ -228,6 +369,14 @@ class Scheduler:
         self.caches = init_cache(cfg, batch_slots, max_len)
         self.queue: List[Request] = []
         self.decode_fn = decode_fn
+        self.guard = guard
+        self.max_retries = max_retries
+        self.backoff = backoff
+        self.backoff_cap = backoff_cap
+        self.stats = {"steps": 0, "decoded": 0, "completed": 0,
+                      "retries": 0, "probes": 0, "failed": 0,
+                      "guard_trips": 0, "exact_reserves": 0,
+                      "deadline_expired": 0}
         # serving weights are fixed: hoist the bitexact datapath's weight
         # quantize + Booth digit decode out of the decode loop (None for
         # amm modes with nothing to cache).  A supplied decode_fn owns its
@@ -238,6 +387,21 @@ class Scheduler:
                            if decode_fn is None else None)
 
     def submit(self, req: Request):
+        """Queue one request; invalid specs raise here, not mid-serve.
+
+        A prompt of ``max_len`` or more tokens can never produce a token
+        (the cache has no position left after the prefill), so it is
+        rejected at submit time — the old behaviour was a scheduler
+        livelock.  Empty prompts are legal: decoding starts from token 0.
+        """
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1, "
+                             f"got {req.max_new}")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot fit max_len={self.max_len} (needs at least one "
+                f"free position to decode)")
         self.queue.append(req)
 
     def _admit(self):
@@ -247,6 +411,151 @@ class Scheduler:
                 self.slots[i] = req
                 self.pos[i] = 0
                 req._pending = list(req.prompt)     # tokens still to feed
+                req._steps = 0
+
+    def _default_fn(self, p, t, c, q):
+        logits, _, new_c = lm_apply(
+            p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
+            caches=c, pos=jnp.int32(q), amm_planes=self.amm_planes)
+        return logits[:, -1], new_c
+
+    def _fail(self, i: int, reason: str):
+        s = self.slots[i]
+        s.error = reason
+        s.done = True
+        self.slots[i] = None
+        self.stats["failed"] += 1
+
+    def _snapshot(self):
+        """Host-independent copy of the caches (donation-safe retry)."""
+        return jax.tree.map(jnp.copy, self.caches)
+
+    def _probe_poison(self, fn, toks, pos, live) -> List[int]:
+        """Which live slots does the decode failure follow?
+
+        Each probe decodes one slot's real token with padding everywhere
+        else, against a throwaway cache copy (a donating fn consumes it —
+        which is fine, it is a copy).  Deterministic poison follows its
+        slot; a failure that no single-slot probe reproduces is systemic.
+        """
+        poison = []
+        for i in live:
+            t = np.zeros_like(toks)
+            t[i] = toks[i]
+            self.stats["probes"] += 1
+            try:
+                fn(self.params, jnp.asarray(t), self._snapshot(),
+                   jnp.int32(pos))
+            except Exception:
+                poison.append(i)
+        return poison
+
+    def _decode_isolated(self, fn, toks, pos, live):
+        """The decode step with retry + poison isolation.
+
+        Returns (logits, live) — ``live`` shrinks when poison requests are
+        failed out.  Returns (None, live) when nothing is left to decode
+        this step; re-raises when the failure is systemic.
+        """
+        donating = self.decode_fn is not None
+        last = None
+        for attempt in range(self.max_retries + 1):
+            backup = self._snapshot() if donating and self.max_retries \
+                else None
+            try:
+                logits, self.caches = fn(self.params, jnp.asarray(toks),
+                                         self.caches, jnp.int32(pos))
+                return logits, live
+            except Exception as e:
+                last = e
+                if backup is not None:
+                    self.caches = backup
+                if attempt < self.max_retries:
+                    self.stats["retries"] += 1
+                    if self.backoff > 0:
+                        time.sleep(min(self.backoff * (2 ** attempt),
+                                       self.backoff_cap))
+        if self.max_retries == 0 and donating:
+            # no retry budget means no pre-call snapshot was taken and a
+            # donating fn has consumed the caches: nothing to salvage
+            raise last
+        poison = self._probe_poison(fn, toks, pos, live)
+        if not poison:
+            raise last            # systemic: every single-slot probe passed
+        for i in poison:
+            self._fail(i, f"decode failed: {last!r}")
+        live = [i for i in live if i not in poison]
+        if not live:
+            return None, live
+        toks = toks.copy()
+        for i in poison:
+            toks[i] = 0
+        logits, self.caches = fn(self.params, jnp.asarray(toks),
+                                 self.caches, jnp.int32(pos))
+        return logits, live
+
+    def _guard_slots(self, logits, toks, pos, pre_caches, live) -> List[int]:
+        """Live slots whose runtime guards tripped on this step's logits."""
+        if self.guard is None:
+            return []
+        arr = np.asarray(logits)
+        ok = finite_rows(arr) if self.guard.finite \
+            else np.ones(arr.shape[0], bool)
+        if self.guard.budget_active and pre_caches is not None \
+                and self.stats["steps"] % self.guard.budget_every == 0:
+            # sampled accuracy audit: the same step on the exact datapath
+            exact_logits, _ = self._exact_fn()(self.params,
+                                               jnp.asarray(toks),
+                                               pre_caches, jnp.int32(pos))
+            err = np.abs(arr.astype(np.float64)
+                         - np.asarray(exact_logits, np.float64))
+            ok &= np.where(np.isfinite(err), err, np.inf).mean(axis=-1) \
+                <= self.guard.budget_abs
+        tripped = [i for i in live if not ok[i]]
+        self.stats["guard_trips"] += len(tripped)
+        return tripped
+
+    def _rt_exact(self) -> ModelRuntime:
+        """This scheduler's runtime with the approximate datapath off."""
+        from ..models.common import AmmRuntime
+        cfg_off = dataclasses.replace(self.rt.amm.cfg, mode="off")
+        return dataclasses.replace(self.rt, amm=AmmRuntime(cfg_off))
+
+    def _exact_fn(self):
+        rt = self._rt_exact()
+
+        def fn(p, t, c, q):
+            logits, _, new_c = lm_apply(p, self.cfg, rt, jnp.asarray(t),
+                                        mode="decode", caches=c, pos=q)
+            return logits[:, -1], new_c
+        return fn
+
+    def _reserve_exact(self, req: Request):
+        """Regenerate one guard-tripped request on the exact datapath.
+
+        From-scratch greedy decode at batch 1 — the robust slow path: a
+        guard trip means the approximate output cannot be trusted, so the
+        whole request replays on ``AmmConfig.mode="off"``.
+        """
+        self.stats["exact_reserves"] += 1
+        fn = self._exact_fn()
+        caches = init_cache(self.cfg, 1, self.max_len)
+        req.out = []
+        pending = list(req.prompt)
+        tok = pending.pop(0) if pending else 0
+        pos = 0
+        while len(req.out) < req.max_new and pos < self.max_len - 1:
+            logits, caches = fn(self.params,
+                                jnp.asarray([[tok]], jnp.int32), caches,
+                                jnp.int32(pos))
+            pos += 1
+            if pending:
+                tok = pending.pop(0)
+            else:
+                tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+                req.out.append(tok)
+        req.exact = True
+        req.done = True
 
     def step(self) -> int:
         """One decode step over all live slots; returns #live requests."""
@@ -254,29 +563,56 @@ class Scheduler:
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return 0
+        self.stats["steps"] += 1
         toks = np.zeros((len(self.slots), 1), np.int32)
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            toks[i, 0] = (s._pending.pop(0) if s._pending
+        for i in live:
+            s = self.slots[i]
+            # peek, don't pop: the prompt token is only consumed once the
+            # decode call commits, so a retried step does not lose it
+            toks[i, 0] = (s._pending[0] if s._pending
                           else (s.out[-1] if s.out else 0))
         pos = int(self.pos[live[0]])   # homogeneous-pos simplification
-        def _default_fn(p, t, c, q):
-            logits, _, new_c = lm_apply(
-                p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
-                caches=c, pos=jnp.int32(q), amm_planes=self.amm_planes)
-            return logits[:, -1], new_c
-
-        fn = self.decode_fn or _default_fn
-        logits, self.caches = fn(self.params, jnp.asarray(toks),
-                                 self.caches, jnp.int32(pos))
+        fn = self.decode_fn or self._default_fn
+        audit = (self.guard is not None and self.guard.budget_active
+                 and self.stats["steps"] % self.guard.budget_every == 0)
+        pre_caches = self._snapshot() if audit else None
+        n_live = len(live)
+        logits, live = self._decode_isolated(fn, toks, pos, live)
+        if logits is None:
+            return n_live
+        for i in self._guard_slots(logits, toks, pos, pre_caches, live):
+            self._reserve_exact(self.slots[i])
+            self.slots[i] = None
+            live = [j for j in live if j != i]
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in live:
             s = self.slots[i]
             self.pos[i] += 1
-            if not s._pending:          # past the prompt: emit
+            s._steps += 1
+            self.stats["decoded"] += 1
+            if s._pending:
+                s._pending.pop(0)       # committed: the step consumed it
+            if not s._pending:           # prompt drained: this step's
+                # logits are the model's prediction past the prompt, so
+                # the same step that consumes the last prompt token also
+                # emits the first generated token (pre-robustness parity)
                 s.out.append(int(nxt[i]))
-                if len(s.out) >= s.max_new or self.pos[i] >= self.max_len - 1:
+                if len(s.out) >= s.max_new:
                     s.done = True
                     self.slots[i] = None
-        return len(live)
+                    self.stats["completed"] += 1
+                    continue
+            if self.pos[i] >= self.max_len - 1:
+                # cache positions exhausted: finish (or fail, mid-prompt)
+                # whether or not the prompt is drained — the old in-branch
+                # check livelocked on prompts at the length cap
+                if s._pending:
+                    self._fail(i, "context exhausted mid-prompt")
+                else:
+                    s.done = True
+                    self.slots[i] = None
+                    self.stats["completed"] += 1
+            elif s.deadline is not None and s._steps >= s.deadline:
+                self._fail(i, "deadline")
+                self.stats["deadline_expired"] += 1
+        return n_live

@@ -1,0 +1,167 @@
+"""Fault injection: the faulted datapath must still equal its oracle.
+
+The robustness layer's load-bearing contract is that ``FaultSpec``
+faults are *shared state*, not datapath-specific noise: the dot-form
+lowering (``kernels.bbm_matmul``) and the scalar oracle
+(``kernels.ref.amm_faulty_ref``) draw identical keyed masks over
+identical representations (digit planes pre-padding, per-chunk int32
+partials), so fault-injected dot-vs-oracle equality stays
+``assert_array_equal`` — the repo's contract idiom — across word
+lengths, VBLs, truncation kinds and fault models.  A disabled spec must
+be *bit-identical* to the unfaulted datapath (python-level identity, not
+just numerically close).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import FaultSpec
+from repro.core.faults import (apply_acc_fault, apply_plane_faults,
+                               plane_fault_mask)
+from repro.core.multipliers import MulSpec
+from repro.kernels.bbm_matmul import bbm_matmul_dynamic
+from repro.kernels.booth_rows import booth_precode
+from repro.kernels.ref import amm_approx_ref, amm_faulty_ref
+
+RNG = np.random.default_rng(17)
+
+# both truncation kinds at every word length, the exact multiplier
+# (vbl=0), and (16, 3) whose small chunk length exercises the chunked
+# accumulation schedule (and therefore per-chunk fault keying) at K=70
+SWEEP = [("bbm0", 8, 5), ("bbm1", 8, 7), ("bbm0", 12, 7),
+         ("bbm1", 12, 11), ("bbm0", 16, 13), ("bbm1", 16, 15),
+         ("bbm0", 16, 3), ("booth", 16, 0)]
+
+# stuck-at defects and keyed transient flips, plane and accumulator
+# sites, single-lane and all-lane, correction-rows-only
+FAULTS = [
+    FaultSpec(target="plane", model="flip", p=0.05, lane="all", seed=3),
+    FaultSpec(target="plane", model="stuck1", p=0.07, lane="mag_lo",
+              seed=5),
+    FaultSpec(target="plane", model="stuck0", p=0.2, lane="neg",
+              rows="corr", seed=9),
+    FaultSpec(target="acc", model="flip", p=0.25, bit=11, seed=7),
+]
+
+
+def _operands(m=4, k=70, n=8):
+    x = RNG.standard_normal((m, k)).astype(np.float32)
+    w = RNG.standard_normal((k, n)).astype(np.float32)
+    return x, w
+
+
+def _kind(mul):
+    return {"booth": 0, "bbm0": 0, "bbm1": 1}[mul]
+
+
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_faulted_dot_equals_faulted_oracle(mul, wl, vbl):
+    """Every fault model, bit-for-bit, across the spec sweep."""
+    x, w = _operands()
+    spec = MulSpec(mul, wl, vbl)
+    v = 0 if mul == "booth" else vbl
+    for fault in FAULTS:
+        got = np.asarray(bbm_matmul_dynamic(x, w, wl=wl, vbl=v,
+                                            kind=_kind(mul), fault=fault))
+        ref = np.asarray(amm_faulty_ref(x, w, spec, fault=fault))
+        assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("mul,wl,vbl", [("bbm0", 16, 13), ("bbm1", 12, 7),
+                                        ("booth", 16, 0)])
+def test_disabled_fault_is_bit_identical(mul, wl, vbl):
+    """fault=None, a rate-0 spec, and the unfaulted entry point agree
+    bitwise — the robustness hooks must cost nothing when off."""
+    x, w = _operands()
+    spec = MulSpec(mul, wl, vbl)
+    v = 0 if mul == "booth" else vbl
+    base = np.asarray(bbm_matmul_dynamic(x, w, wl=wl, vbl=v,
+                                         kind=_kind(mul)))
+    for fault in (None, FaultSpec(p=0.0),
+                  FaultSpec(target="acc", p=0.0)):
+        got = np.asarray(bbm_matmul_dynamic(x, w, wl=wl, vbl=v,
+                                            kind=_kind(mul), fault=fault))
+        assert_array_equal(got, base)
+        assert_array_equal(np.asarray(amm_faulty_ref(x, w, spec,
+                                                     fault=fault)),
+                           np.asarray(amm_approx_ref(x, w, spec)))
+
+
+def test_faults_actually_fault():
+    """A rate-p spec must change outputs (guards the no-op regression)."""
+    x, w = _operands()
+    spec = MulSpec("bbm0", 16, 13)
+    base = np.asarray(amm_approx_ref(x, w, spec))
+    for fault in FAULTS[:2] + FAULTS[3:]:     # corr-rows at vbl=13 too
+        got = np.asarray(bbm_matmul_dynamic(x, w, wl=16, vbl=13, kind=0,
+                                            fault=fault))
+        assert (got != base).any(), fault
+
+
+def test_plane_faults_stay_in_decode_domain():
+    """Whatever the fault does to the stored bits, the faulted planes
+    must remain in the {0,1,2} x {0,1} domain the accumulate forms and
+    ``_MOD_BRANCHES`` enumerate (the 11 select saturates to 2A)."""
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, (32, 8)), jnp.int32)
+    mag, neg = booth_precode(codes, 16)
+    for model in ("flip", "stuck0", "stuck1"):
+        spec = FaultSpec(target="plane", model=model, p=0.5, lane="all",
+                         seed=1)
+        fm, fn = apply_plane_faults(mag, neg, spec, vbl=13)
+        assert int(jnp.max(fm)) <= 2 and int(jnp.min(fm)) >= 0
+        assert set(np.unique(np.asarray(fn))) <= {0, 1}
+
+
+def test_corr_rows_restriction_leaves_upper_rows_clean():
+    """rows="corr" confines the site to the ceil(vbl/2) truncated rows."""
+    codes = jnp.asarray(RNG.integers(0, 1 << 16, (64, 4)), jnp.int32)
+    mag, neg = booth_precode(codes, 16)
+    vbl = 13
+    spec = FaultSpec(target="plane", model="flip", p=0.9, lane="all",
+                     rows="corr", seed=2)
+    fm, fn = apply_plane_faults(mag, neg, spec, vbl=vbl)
+    n_corr = (vbl + 1) // 2
+    assert_array_equal(np.asarray(fm)[n_corr:], np.asarray(mag)[n_corr:])
+    assert_array_equal(np.asarray(fn)[n_corr:], np.asarray(neg)[n_corr:])
+    assert (np.asarray(fm)[:n_corr] != np.asarray(mag)[:n_corr]).any()
+
+
+def test_masks_are_keyed_and_deterministic():
+    """Same spec -> same mask; different seed/lane/chunk -> different."""
+    spec = FaultSpec(target="plane", model="flip", p=0.3, seed=4)
+    m1 = np.asarray(plane_fault_mask(spec, (8, 16, 4), 0))
+    m2 = np.asarray(plane_fault_mask(spec, (8, 16, 4), 0))
+    assert_array_equal(m1, m2)
+    other = np.asarray(plane_fault_mask(
+        dataclasses.replace(spec, seed=5), (8, 16, 4), 0))
+    assert (m1 != other).any()
+    assert (m1 != np.asarray(plane_fault_mask(spec, (8, 16, 4), 1))).any()
+    acc = jnp.zeros((16, 16), jnp.int32)
+    a0 = np.asarray(apply_acc_fault(
+        acc, FaultSpec(target="acc", p=0.4, bit=5, seed=4), 0))
+    a1 = np.asarray(apply_acc_fault(
+        acc, FaultSpec(target="acc", p=0.4, bit=5, seed=4), 1))
+    assert (a0 != a1).any()               # chunk index folds into the key
+    assert set(np.unique(a0)) <= {0, 1 << 5}
+
+
+def test_acc_fault_is_an_xor_at_the_named_bit():
+    acc = jnp.asarray(RNG.integers(-1000, 1000, (8, 8)), jnp.int32)
+    spec = FaultSpec(target="acc", model="flip", p=1.0, bit=7, seed=0)
+    out = np.asarray(apply_acc_fault(acc, spec, 0))
+    assert_array_equal(out, np.asarray(acc) ^ (1 << 7))
+
+
+def test_faultspec_validation():
+    for bad in [dict(target="dram"), dict(model="stuck2"),
+                dict(lane="carry"), dict(rows="even"), dict(p=1.5),
+                dict(p=-0.1), dict(bit=31), dict(bit=-1)]:
+        with pytest.raises(ValueError):
+            FaultSpec(**bad)
+    assert not FaultSpec().enabled
+    assert FaultSpec(p=0.1).enabled

@@ -33,10 +33,20 @@ from repro.kernels.ref import (AMM_BOOTH_KINDS, amm_effective_vbl,
                                amm_flash_attention_ref, amm_quantize)
 from repro.models import attention as attention_mod
 from repro.models.attention import (FlashFallbackWarning, attention,
-                                    attn_table, flash_amm_chunked_equiv)
+                                    attn_table, flash_amm_chunked_equiv,
+                                    reset_flash_fallback_dedup)
 from repro.models.common import AmmRuntime, init_params
 
 RNG = np.random.default_rng(31)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_fallback_dedup():
+    # fallback warnings dedup per (reason, call-site): without a reset,
+    # whichever test warns first would swallow every later test's warning
+    reset_flash_fallback_dedup()
+    yield
+    reset_flash_fallback_dedup()
 
 # same Booth-family cells as tests/test_amm_attention.py: both word
 # lengths x both truncation kinds, the exact multiplier (vbl=0), and the
@@ -258,6 +268,24 @@ def test_no_lowering_fallback_warns(monkeypatch):
     y_js, _ = attention(p, x, cfg, positions=positions, use_pallas=False,
                         amm=rt)
     np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_js))
+
+
+def test_fallback_warning_deduplicated_per_site(monkeypatch):
+    """The same fallback from the same call site warns exactly once — a
+    decode loop hitting the cap every step says it one time, not per
+    token.  A different reason (or a reset) warns again."""
+    cfg, p, x, positions, rt = _attn_setup("all")
+    monkeypatch.setattr(attention_mod, "_FLASH_SEQ_CAP", 8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):   # same site, same reason: one warning
+            attention(p, x, cfg, positions=positions, use_pallas=True,
+                      amm=rt)
+    fall = [w for w in rec if issubclass(w.category, FlashFallbackWarning)]
+    assert len(fall) == 1
+    reset_flash_fallback_dedup()
+    with pytest.warns(FlashFallbackWarning):   # reset: the site warns again
+        attention(p, x, cfg, positions=positions, use_pallas=True, amm=rt)
 
 
 def test_in_cap_flash_route_does_not_warn():

@@ -1,0 +1,98 @@
+"""Runtime guards: finite/budget monitors and checkify-wired envelopes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guards import (GuardConfig, GuardReport, checkify_call,
+                               code_range_check, finite_rows, guard_rows,
+                               scaled_bound_check)
+
+
+def test_finite_rows_per_row_granularity():
+    y = np.ones((4, 8), np.float32)
+    y[1, 3] = np.nan
+    y[3, 0] = np.inf
+    np.testing.assert_array_equal(finite_rows(y),
+                                  [True, False, True, False])
+
+
+def test_guard_rows_finite_trip():
+    y = np.ones((3, 4), np.float32)
+    y[2] = np.nan
+    rep = guard_rows(y, GuardConfig())
+    assert not rep.ok and rep.tripped == ("finite",)
+    np.testing.assert_array_equal(rep.row_ok, [True, True, False])
+    assert rep.nonfinite == 4
+
+
+def test_guard_rows_budget_trip_only_on_audited_rows():
+    cfg = GuardConfig(budget_abs=0.5, budget_every=1)
+    y = np.zeros((3, 4), np.float32)
+    exact = np.stack([np.zeros(4), np.ones(4), np.full(4, 0.4)]
+                     ).astype(np.float32)
+    rep = guard_rows(y, cfg, y_exact=exact)
+    assert rep.tripped == ("budget",)
+    np.testing.assert_array_equal(rep.row_ok, [True, False, True])
+    assert rep.budget_err == pytest.approx(1.0)
+    # no reference passed -> no budget check, clean report
+    assert guard_rows(y, cfg).ok
+
+
+def test_guard_rows_clean():
+    rep = guard_rows(np.ones((2, 2)), GuardConfig())
+    assert rep.ok and rep.tripped == () and rep.row_ok.all()
+
+
+def test_budget_active_requires_both_knobs():
+    assert not GuardConfig().budget_active
+    assert not GuardConfig(budget_abs=0.1).budget_active
+    assert not GuardConfig(budget_every=4).budget_active
+    assert GuardConfig(budget_abs=0.1, budget_every=4).budget_active
+
+
+def test_report_trip_dedups():
+    rep = GuardReport()
+    rep.trip("finite")
+    rep.trip("finite")
+    rep.trip("budget")
+    assert rep.tripped == ("finite", "budget") and not rep.ok
+
+
+def test_code_range_check_survives_jit():
+    """The point of checkify wiring: the check runs *inside* a jitted
+    function and still raises host-side with its message."""
+    def f(c):
+        code_range_check(c, 8)
+        return c * 2
+
+    out = checkify_call(f, jnp.arange(-128, 128))
+    assert out.shape == (256,)
+    with pytest.raises(Exception, match="8-bit envelope"):
+        checkify_call(f, jnp.array([200]))
+    with pytest.raises(Exception, match="8-bit envelope"):
+        checkify_call(f, jnp.array([-129]))
+
+
+def test_scaled_bound_check_trips_past_bound():
+    def g(a):
+        scaled_bound_check(a, 100)
+        return a + 1
+
+    np.testing.assert_array_equal(
+        np.asarray(checkify_call(g, jnp.array([100], jnp.int32))), [101])
+    with pytest.raises(Exception, match="int32 envelope"):
+        checkify_call(g, jnp.array([-101], jnp.int32))
+
+
+def test_checkify_call_is_jitted_and_transparent():
+    """No tripped check -> the wrapped output equals the plain call."""
+    def f(x):
+        code_range_check(x, 16, what="codes")
+        return jnp.cumsum(x)
+
+    x = jnp.arange(10)
+    np.testing.assert_array_equal(np.asarray(checkify_call(f, x)),
+                                  np.asarray(jnp.cumsum(x)))
