@@ -1,0 +1,256 @@
+"""Serving-load benchmark: continuous batching + int-code KV cache.
+
+Three questions, one artifact (``BENCH_serve.json``):
+
+  * **Scheduling** — what does continuous batching buy under Poisson
+    arrivals?  The same arrival stream drives the legacy flush-wave
+    discipline (a wave is admitted only when every slot is idle, the
+    whole wave decodes in lockstep) and the continuous scheduler
+    (per-step admission, per-request eviction).  Reported per mode:
+    p50/p95/p99 request latency in scheduler steps, wall time, and
+    tokens/s per user (each request's generated tokens over its own
+    residency).
+  * **Memory** — the int-code cache's byte accounting vs the bf16 float
+    cache it replaces (``serve.kv_cache.memory_report``): at wl=8 the
+    code planes are exactly half the bf16 bytes, and the per-block f32
+    scale planes are reported separately.
+  * **CI gates** (``--smoke``) — the conformance contracts this PR
+    claims: every request's token stream under continuous batching with
+    the int-code cache is *bitwise* its solo-run stream (attention-side
+    amm routing; tests/test_serve_continuous.py sweeps interleavings),
+    and the headline code-vs-bf16 byte ratio is >= 2x.
+
+Latency percentiles are measured in scheduler steps (deterministic);
+wall-clock numbers ride along for context and are host-dependent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform as platform_mod
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import AmmConfig
+from repro.models import ModelRuntime, lm_init
+from repro.serve.engine import Request, Scheduler
+from repro.serve.kv_cache import memory_report
+
+WL, VBL = 8, 5
+
+
+def build_lm():
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode="bitexact", mul="bbm0", wl=WL, param=VBL,
+                           apply_to="attn"))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    return cfg, rt, params
+
+
+def poisson_workload(rng, vocab, *, n_requests, rate):
+    """[(arrival_step, prompt, max_new)] with exponential inter-arrivals."""
+    arrivals, t = [], 0.0
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(2, 9))
+        arrivals.append((int(t), rng.integers(1, vocab, plen).tolist(),
+                         int(rng.integers(2, 6))))
+    return arrivals
+
+
+def _percentiles(lat):
+    return {f"p{p}": float(np.percentile(lat, p)) for p in (50, 95, 99)}
+
+
+def run_continuous(lm, arrivals, *, slots, max_len, kv_codes):
+    """Continuous scheduler under the arrival stream; per-request stats."""
+    cfg, rt, params = lm
+    sched = Scheduler(cfg, rt, params, slots, max_len, continuous=True,
+                      kv_codes=kv_codes)
+    reqs, born = [], {}
+    t, idx = 0, 0
+    t0 = time.perf_counter()
+    while True:
+        while idx < len(arrivals) and arrivals[idx][0] <= t:
+            _, prompt, max_new = arrivals[idx]
+            r = Request(rid=idx, prompt=prompt, max_new=max_new)
+            born[idx] = t
+            reqs.append(r)
+            sched.submit(r)
+            idx += 1
+        live = sched.step()
+        t += 1
+        for r in reqs:
+            if r.done and not hasattr(r, "_lat"):
+                r._lat = t - born[r.rid]
+        if live == 0 and idx >= len(arrivals) and not sched.queue:
+            break
+    wall = time.perf_counter() - t0
+    return _collect(reqs, t, wall)
+
+
+def run_flush_waves(lm, arrivals, *, slots, max_len):
+    """Legacy discipline: a wave admits only once every slot is idle."""
+    cfg, rt, params = lm
+    sched = Scheduler(cfg, rt, params, slots, max_len)
+    reqs, born, pend = [], {}, []
+    t, idx = 0, 0
+    t0 = time.perf_counter()
+    while True:
+        while idx < len(arrivals) and arrivals[idx][0] <= t:
+            _, prompt, max_new = arrivals[idx]
+            r = Request(rid=idx, prompt=prompt, max_new=max_new)
+            born[idx] = t
+            reqs.append(r)
+            pend.append(r)
+            idx += 1
+        if all(s is None for s in sched.slots) and not sched.queue:
+            for r in pend[:slots]:
+                sched.submit(r)
+            pend = pend[slots:]
+        live = sched.step()
+        t += 1
+        for r in reqs:
+            if r.done and not hasattr(r, "_lat"):
+                r._lat = t - born[r.rid]
+        if live == 0 and idx >= len(arrivals) and not pend \
+                and not sched.queue:
+            break
+    wall = time.perf_counter() - t0
+    return _collect(reqs, t, wall)
+
+
+def _collect(reqs, steps, wall):
+    lat = [r._lat for r in reqs]
+    toks = sum(len(r.out) for r in reqs)
+    per_user = [len(r.out) / (r._lat * wall / max(steps, 1))
+                for r in reqs if r._lat > 0]
+    return {"requests": len(reqs), "steps": steps, "wall_s": wall,
+            "total_tokens": toks,
+            "tokens_per_s": toks / wall,
+            "tokens_per_s_per_user": float(np.mean(per_user)),
+            "latency_steps": _percentiles(lat),
+            "streams": {r.rid: list(r.out) for r in reqs},
+            "all_ok": all(r.done and r.error is None for r in reqs)}
+
+
+# ------------------------------------------------------------ smoke gates
+def gate_solo_bitwise(lm, arrivals, *, slots, max_len) -> int:
+    """Every continuous+kv_codes stream == its solo-run stream, bitwise."""
+    batched = run_continuous(lm, arrivals, slots=slots, max_len=max_len,
+                             kv_codes=True)
+    if not batched["all_ok"]:
+        return 0
+    cfg, rt, params = lm
+    for rid, (_, prompt, max_new) in enumerate(arrivals):
+        sched = Scheduler(cfg, rt, params, slots, max_len, continuous=True,
+                          kv_codes=True)
+        solo = Request(rid=0, prompt=list(prompt), max_new=max_new)
+        sched.submit(solo)
+        while sched.step():
+            pass
+        if solo.out != batched["streams"][rid]:
+            return 0
+    return 1
+
+
+def gate_memory_ratio(rep) -> int:
+    return int(rep["ratio_codes"] >= 2.0)
+
+
+def serve_load(smoke: bool = False, out: str | None = None):
+    rows: list = []
+    slots = 2 if smoke else 4
+    max_len = 32 if smoke else 64
+    n_req = 6 if smoke else 16
+    lm = build_lm()
+    cfg = lm[0]
+    rng = np.random.default_rng(5)
+    arrivals = poisson_workload(rng, cfg.vocab, n_requests=n_req, rate=0.7)
+
+    modes = {
+        "flush_waves_float": run_flush_waves(lm, arrivals, slots=slots,
+                                             max_len=max_len),
+        "continuous_float": run_continuous(lm, arrivals, slots=slots,
+                                           max_len=max_len, kv_codes=False),
+        "continuous_codes": run_continuous(lm, arrivals, slots=slots,
+                                           max_len=max_len, kv_codes=True),
+    }
+    for name, m in modes.items():
+        rows.append({"bench": "serve_load", "mode": name,
+                     **{k: v for k, v in m.items() if k != "streams"}})
+
+    rep = memory_report(cfg, slots, max_len, wl=WL)
+    rows.append({"bench": "kv_cache_bytes", "wl": WL, **rep})
+
+    gates = {"solo_vs_batched_bitwise":
+             gate_solo_bitwise(lm, arrivals[:4], slots=slots,
+                               max_len=max_len),
+             "code_cache_memory_2x": gate_memory_ratio(rep)}
+
+    derived = dict(gates)
+    derived.update({
+        "all_requests_served": int(all(m["all_ok"] for m in modes.values())),
+        "latency_p50_flush": modes["flush_waves_float"]["latency_steps"]["p50"],
+        "latency_p50_continuous": modes["continuous_codes"]["latency_steps"]["p50"],
+        "latency_p95_flush": modes["flush_waves_float"]["latency_steps"]["p95"],
+        "latency_p95_continuous": modes["continuous_codes"]["latency_steps"]["p95"],
+        "latency_p99_flush": modes["flush_waves_float"]["latency_steps"]["p99"],
+        "latency_p99_continuous": modes["continuous_codes"]["latency_steps"]["p99"],
+        "tokens_per_s_per_user_continuous":
+            modes["continuous_codes"]["tokens_per_s_per_user"],
+        "cache_bytes_codes": rep["code_bytes"],
+        "cache_bytes_scales": rep["scale_bytes"],
+        "cache_bytes_bf16": rep["bf16_bytes"],
+        "cache_ratio_codes": rep["ratio_codes"],
+        "cache_ratio_total": rep["ratio_total"],
+        "cells": len(rows),
+    })
+    if out:
+        config = {
+            "smoke": smoke, "slots": slots, "max_len": max_len,
+            "n_requests": n_req, "wl": WL, "vbl": VBL,
+            "arch": "qwen2-0.5b (reduced)", "apply_to": "attn",
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "numpy_version": np.__version__,
+            "python_version": platform_mod.python_version(),
+            "platform": platform_mod.platform(),
+            "machine": platform_mod.machine(),
+            "cpu_count": os.cpu_count(),
+        }
+        with open(out, "w") as f:
+            json.dump({"config": config, "derived": derived, "rows": rows},
+                      f, indent=1)
+    return rows, derived
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced configuration for CI")
+    p.add_argument("--out", default="BENCH_serve.json", help="results file")
+    args = p.parse_args(argv)
+    _, derived = serve_load(smoke=args.smoke, out=args.out)
+    print(json.dumps(derived, indent=1, sort_keys=True))
+    # CI gate: the solo-vs-batched bitwise conformance contract and the
+    # code-cache memory claim must both hold
+    return 0 if derived["solo_vs_batched_bitwise"] \
+        and derived["code_cache_memory_2x"] \
+        and derived["all_requests_served"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

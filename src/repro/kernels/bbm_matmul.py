@@ -60,7 +60,8 @@ from .booth_rows import (amm_chunk_len, bbm_rows_product_precoded,
                          scaled_trunc_rows, signed_digit, split_signed)
 from .ref import amm_quantize
 
-__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_dynamic",
+__all__ = ["bbm_matmul_kernel", "bbm_matmul", "bbm_matmul_coded",
+           "bbm_matmul_coded_kblocks", "bbm_matmul_dynamic",
            "bbm_matmul_precoded", "bbm_matmul_scaled", "dot_scaled_chunked"]
 
 # auto-form only: above this many int32 elements the shift > vbl residual
@@ -336,6 +337,64 @@ def bbm_matmul_dynamic(a, b, *, wl: int, vbl: int, kind: int = 0,
     yq = bbm_matmul_scaled(aq, mag, neg, wl=wl, vbl=vbl, kind=kind,
                            fault=fault)
     return (yq * (s_a * s_b)).astype(a.dtype)
+
+
+def bbm_matmul_coded(a, b_codes, s_b, *, wl: int, vbl: int, kind: int = 0):
+    """Codes-in sibling of ``bbm_matmul_dynamic``: ``b`` arrives quantized.
+
+    The int-code KV cache entry point.  ``a`` (M, K) float is quantized
+    per call; ``b_codes`` (K, N) are wl-bit codes frozen at cache-write
+    time with scale(s) ``s_b`` — a scalar, or an (N,) vector when columns
+    were quantized in groups (the per-block K-cache scales, expanded to
+    per-column by the caller).  Skipping the per-call ``b``-side
+    ``amm_quantize`` is the point: that max/round/clip pass over the whole
+    cache slice is the hot non-matmul cost of the dynamic entry at decode.
+
+    When ``s_b`` equals the scale ``amm_quantize`` would derive for the
+    float ``b``, this is bit-identical to ``bbm_matmul_dynamic(a, b)``
+    minus the straight-through caveats: same contraction, and the descale
+    ``yq * (s_a * s_b)`` broadcasts a per-column vector through the same
+    float expression as the scalar.  Not jitted as a unit for the same
+    per-compilation-context reason as the dynamic entry.
+    """
+    aq, s_a = amm_quantize(a, wl)
+    mag, neg = booth_precode(jnp.asarray(b_codes, jnp.int32), wl)
+    yq = bbm_matmul_scaled(aq, mag, neg, wl=wl, vbl=vbl, kind=kind)
+    s_b = jnp.asarray(s_b, jnp.float32)
+    if s_b.ndim == 1:
+        s_b = s_b[None, :]
+    return (yq * (s_a * s_b)).astype(a.dtype)
+
+
+def bbm_matmul_coded_kblocks(a, b_codes, s_b, *, wl: int, vbl: int,
+                             kind: int = 0, block: int):
+    """``bbm_matmul_coded`` with per-K-block ``b`` scales (the PV product).
+
+    The V cache quantizes rows in groups of ``block`` positions, so the
+    contraction cannot descale once at the end: each K-block contracts as
+    codes through ``bbm_matmul_scaled`` and descales by its own
+    ``s_a * s_b[j]`` before the float32 combine, accumulated in block
+    order (float addition order is part of the bitwise contract — with a
+    single block this reduces exactly to ``bbm_matmul_coded``).  ``a``'s
+    dynamic scale is derived once over the whole (M, K) slice, matching
+    what the dynamic entry would compute for the same ``a``.
+
+    a: (M, K) float; b_codes: (K, N) codes with K % block == 0;
+    s_b: (K // block,) f32.
+    """
+    kk = b_codes.shape[0]
+    if kk % block:
+        raise ValueError(f"K={kk} not a multiple of block={block}")
+    aq, s_a = amm_quantize(a, wl)
+    b_codes = jnp.asarray(b_codes, jnp.int32)
+    acc = None
+    for bi, lo in enumerate(range(0, kk, block)):
+        mag, neg = booth_precode(b_codes[lo:lo + block], wl)
+        yq = bbm_matmul_scaled(aq[:, lo:lo + block], mag, neg,
+                               wl=wl, vbl=vbl, kind=kind)
+        part = yq * (s_a * s_b[bi])
+        acc = part if acc is None else acc + part
+    return acc.astype(a.dtype)
 
 
 def bbm_matmul_kernel(x_ref, wm_ref, ws_ref, o_ref, *, wl: int, vbl: int,

@@ -9,10 +9,12 @@ from ..core.faults import apply_acc_fault
 from ..core.multipliers import MulSpec, mul as core_mul
 from .booth_rows import amm_chunk_len
 
-__all__ = ["amm_approx_ref", "amm_attention_ref", "amm_decode_attention_ref",
-           "amm_dense_ref", "amm_dot_ref", "amm_faulty_ref",
-           "amm_flash_attention_ref", "amm_quantize", "bbm_matmul_ref",
-           "fir_bank_ref", "quant_matmul_ref", "attention_ref"]
+__all__ = ["amm_approx_ref", "amm_attention_ref", "amm_coded_ref",
+           "amm_coded_kblocks_ref", "amm_decode_attention_codes_ref",
+           "amm_decode_attention_ref", "amm_dense_ref", "amm_dot_ref",
+           "amm_faulty_ref", "amm_flash_attention_ref", "amm_quantize",
+           "bbm_matmul_ref", "fir_bank_ref", "quant_matmul_ref",
+           "attention_ref"]
 
 # Booth-family specs and their closed-form truncation kind; every other
 # multiplier family has no dot-form lowering and keeps the scalar path
@@ -101,6 +103,74 @@ def amm_approx_ref(x, w, spec: MulSpec):
     else:
         yq = jnp.sum(prod.astype(jnp.float32), axis=-2)
     return (yq * (s_x * s_w)).astype(x.dtype)
+
+
+def _coded_yq_ref(aq, b_codes, spec: MulSpec):
+    """Chunk-scheduled closed-form contraction of two code grids.
+
+    The shared core of the codes-in oracles: products through
+    ``core.multipliers``, divided by ``2^vbl`` (exact), summed int32 per
+    K-chunk of ``amm_chunk_len``, chunk partials combined in float32 in
+    chunk order, rescaled — the Booth branch of ``amm_approx_ref`` minus
+    its quantization and descale.  Returns the full-product-scale float
+    accumulator ``yq``.
+    """
+    prod = core_mul(spec)(aq[..., :, None], b_codes[None, :, :])
+    vbl = amm_effective_vbl(spec)
+    scaled = prod >> vbl
+    k = aq.shape[-1]
+    chunk = amm_chunk_len(spec.wl, vbl)
+    if k <= chunk:
+        return jnp.sum(scaled, axis=-2, dtype=jnp.int32
+                       ).astype(jnp.float32) * float(1 << vbl)
+    yq = jnp.zeros(scaled.shape[:-2] + scaled.shape[-1:], jnp.float32)
+    for lo in range(0, k, chunk):             # chunk order == the scan's
+        part = jnp.sum(scaled[..., lo:lo + chunk, :], axis=-2,
+                       dtype=jnp.int32)
+        yq = yq + part.astype(jnp.float32)
+    return yq * float(1 << vbl)
+
+
+def amm_coded_ref(a, b_codes, s_b, spec: MulSpec):
+    """Scalar oracle of ``bbm_matmul.bbm_matmul_coded``.
+
+    ``a`` (M, K) float is quantized per call (shared ``amm_quantize``);
+    ``b_codes`` (K, N) arrive pre-quantized with scalar or per-column
+    ``s_b`` — same contraction schedule and descale expression as the
+    codes-in datapath, products through the closed forms.
+    """
+    if spec.name not in AMM_BOOTH_KINDS:
+        raise ValueError(f"no codes-in lowering for family {spec.name!r}")
+    aq, s_a = amm_quantize(a, spec.wl)
+    yq = _coded_yq_ref(aq, jnp.asarray(b_codes, jnp.int32), spec)
+    s_b = jnp.asarray(s_b, jnp.float32)
+    if s_b.ndim == 1:
+        s_b = s_b[None, :]
+    return (yq * (s_a * s_b)).astype(a.dtype)
+
+
+def amm_coded_kblocks_ref(a, b_codes, s_b, spec: MulSpec, *, block: int):
+    """Scalar oracle of ``bbm_matmul.bbm_matmul_coded_kblocks``.
+
+    Per-K-block descale in block order: each block's closed-form
+    contraction (itself chunk-scheduled when ``block`` exceeds
+    ``amm_chunk_len``) is scaled by ``s_a * s_b[j]`` and combined in
+    float32 — the same float expression tree as the datapath.
+    """
+    if spec.name not in AMM_BOOTH_KINDS:
+        raise ValueError(f"no codes-in lowering for family {spec.name!r}")
+    kk = b_codes.shape[0]
+    if kk % block:
+        raise ValueError(f"K={kk} not a multiple of block={block}")
+    aq, s_a = amm_quantize(a, spec.wl)
+    b_codes = jnp.asarray(b_codes, jnp.int32)
+    acc = None
+    for bi, lo in enumerate(range(0, kk, block)):
+        yq = _coded_yq_ref(aq[..., lo:lo + block], b_codes[lo:lo + block],
+                           spec)
+        part = yq * (s_a * s_b[bi])
+        acc = part if acc is None else acc + part
+    return acc.astype(a.dtype)
 
 
 def amm_faulty_ref(x, w, spec: MulSpec, fault=None):
@@ -229,17 +299,34 @@ def amm_flash_attention_ref(q, k, v, spec: MulSpec, *, causal: bool = True):
     return out.transpose(0, 2, 1, 3)
 
 
-def amm_decode_attention_ref(q, k_cache, v_cache, kv_len, spec: MulSpec):
+def amm_decode_attention_ref(q, k_cache, v_cache, kv_len, spec: MulSpec, *,
+                             ste: bool = True):
     """Scalar oracle of single-position amm attention against a cache.
 
     Mirrors ``models.attention.decode_attention`` the same way
     ``amm_attention_ref`` mirrors the chunked path: shared schedule,
-    scalar closed-form products.
+    scalar closed-form products.  ``ste=False`` drops the straight-through
+    composition (pure approximate forward) — the value the code-domain
+    decode path computes, which never forms an exact product.
     """
     from ..models.attention import decode_attention
     rt = _attn_runtime(spec)
     return decode_attention(q, k_cache, v_cache, kv_len, amm=rt,
-                            amm_oracle=True)
+                            amm_oracle=True, amm_ste=ste)
+
+
+def amm_decode_attention_codes_ref(q, cache, kv_len, spec: MulSpec):
+    """Scalar oracle of ``models.attention.decode_attention_codes``.
+
+    Shared schedule (the code-domain decode itself, oracle mode), scalar
+    closed-form products via ``amm_coded_ref``/``amm_coded_kblocks_ref``.
+    ``cache`` is a per-layer slice of the int-code KV cache
+    (``serve.kv_cache.init_code_cache`` leaves without the layer axis).
+    """
+    from ..models.attention import decode_attention_codes
+    rt = _attn_runtime(spec)
+    return decode_attention_codes(q, cache, kv_len, amm=rt,
+                                  amm_oracle=True)
 
 
 def _attn_runtime(spec: MulSpec):

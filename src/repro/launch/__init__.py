@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 __all__ = ["add_amm_attn_arg", "resolve_amm_apply_to",
-           "validate_amm_args"]
+           "validate_amm_args", "validate_serve_flags"]
 
 
 def validate_amm_args(ap, args) -> None:
@@ -37,6 +37,29 @@ def validate_amm_args(ap, args) -> None:
     if args.mul in ("booth", "bbm0", "bbm1") and args.vbl >= args.wl:
         ap.error(f"--vbl {args.vbl} >= --wl {args.wl}: nullifying every "
                  f"product bit leaves no multiplier; VBL must be < WL")
+
+
+def validate_serve_flags(ap, args) -> None:
+    """Reject ``--kv-codes`` combinations the code cache cannot serve.
+
+    The int-code KV cache stores exactly the quantized representation the
+    Booth attention lowering consumes, so it only exists when decode
+    attention is amm-routed: mode="bitexact", a Booth-family --mul, and
+    --amm-attn present.  Anything else would need a float cache anyway —
+    fail at parse time instead of deep inside ``Scheduler.__init__``.
+    """
+    if not getattr(args, "kv_codes", False):
+        return
+    from ..kernels.ref import AMM_BOOTH_KINDS
+    if args.amm != "bitexact":
+        ap.error(f"--kv-codes stores Booth codes, which only the bitexact "
+                 f"datapath consumes; got --amm {args.amm}")
+    if args.mul not in AMM_BOOTH_KINDS:
+        ap.error(f"--kv-codes needs a Booth-family --mul "
+                 f"({sorted(AMM_BOOTH_KINDS)}); got --mul {args.mul!r}")
+    if args.amm_attn is None:
+        ap.error("--kv-codes caches the attention operands, so attention "
+                 "must be amm-routed: pass --amm-attn (or --amm-attn attn)")
 
 
 def add_amm_attn_arg(ap) -> None:

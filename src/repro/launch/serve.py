@@ -10,6 +10,13 @@ decode.  --amm-attn widens the routing to the attention score/value
 products (``--amm-attn`` alone = apply_to="all", ``--amm-attn attn`` =
 attention only); those are activation x activation, so they quantize per
 step — there are no weight planes to cache for them.
+
+--continuous switches the Scheduler to continuous batching: requests are
+admitted into free slots every step (prefill on a batch-1 slot slice) and
+evicted the step they finish, so a long prompt never stalls resident
+decodes.  --kv-codes stores the KV cache as wl-bit int codes + per-block
+f32 scales (docs/serving.md); it requires --amm bitexact with a
+Booth-family --mul and --amm-attn (``validate_serve_flags``).
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ from ..configs.base import AmmConfig
 from ..models import ModelRuntime, lm_init
 from ..serve.engine import Request, Scheduler, make_serve_fns
 from . import (add_amm_attn_arg, resolve_amm_apply_to,
-               validate_amm_args)
+               validate_amm_args, validate_serve_flags)
 from .mesh import make_host_mesh
 
 
@@ -49,10 +56,19 @@ def main(argv=None):
                          "lowering (exact-flash, or flash-amm when "
                          "--amm-attn makes attention amm-active); decode "
                          "keeps the cache path")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: per-step admission into "
+                         "free slots, per-request eviction, prefill on "
+                         "batch-1 slot slices")
+    ap.add_argument("--kv-codes", action="store_true",
+                    help="store the KV cache as wl-bit int codes + "
+                         "per-block f32 scales; needs --amm bitexact with "
+                         "a Booth-family --mul and --amm-attn")
     add_amm_attn_arg(ap)
     args = ap.parse_args(argv)
     apply_to = resolve_amm_apply_to(ap, args)
     validate_amm_args(ap, args)
+    validate_serve_flags(ap, args)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -68,10 +84,14 @@ def main(argv=None):
     # after pays contractions only
     mesh = make_host_mesh(1, 1)
     planes = rt.build_planes(cfg, params)
-    _, decode_j = make_serve_fns(cfg, rt, mesh, batch=args.slots,
-                                 max_len=args.max_len, amm_planes=planes)
+    prefill_j, decode_j = make_serve_fns(cfg, rt, mesh, batch=args.slots,
+                                         max_len=args.max_len,
+                                         amm_planes=planes,
+                                         kv_codes=args.kv_codes)
     sched = Scheduler(cfg, rt, params, args.slots, args.max_len,
-                      decode_fn=decode_j)
+                      decode_fn=decode_j,
+                      prefill_fn=prefill_j if args.continuous else None,
+                      continuous=args.continuous, kv_codes=args.kv_codes)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):

@@ -33,7 +33,12 @@ chunked path.
 
 KV caches are ``(batch, seq, kv_heads, head_dim)`` per tensor (MLA caches the
 compressed latent ``(batch, seq, kv_latent+rope)``), updated with
-``dynamic_update_slice`` at the decode position.
+``dynamic_update_slice`` at the decode position — a scalar, or a (B,)
+per-slot vector under continuous batching.  The serving-side int-code
+variant (``serve.kv_cache``) stores wl-bit codes plus per-block f32 scales
+instead of float values; ``code_cache_update`` freezes each token's codes
+at write time and ``decode_attention_codes`` contracts them directly
+(docs/serving.md).
 """
 from __future__ import annotations
 
@@ -48,7 +53,8 @@ from ..configs.base import ArchConfig
 from .common import Spec, amm_dot, apply_rope, rmsnorm
 
 __all__ = ["attn_table", "mla_table", "attention", "mla_attention",
-           "chunked_attention", "decode_attention",
+           "chunked_attention", "code_cache_dequant", "code_cache_update",
+           "decode_attention", "decode_attention_codes",
            "flash_amm_chunked_equiv", "FlashFallbackWarning",
            "reset_flash_fallback_dedup"]
 
@@ -316,15 +322,26 @@ _flash_amm_ste.defvjp(_flash_amm_fwd, _flash_amm_bwd)
 
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, amm=None,
-                     amm_oracle: bool = False):
-    """Single-position attention against a cache.
+                     amm_oracle: bool = False, amm_ste: bool = True):
+    """Single-position attention against a float cache (requantize-per-call).
 
-    q: (B, 1, H, D); caches: (B, S, KV, D); kv_len: valid length (traced).
-    amm/amm_oracle: as in ``chunked_attention``.  The decode products are
-    quantized per (batch, kv-head) over the *whole* cache slice — dead
-    positions past ``kv_len`` are zeros (``init_cache``), so they never
-    move the dynamic-range scale, and their score columns are masked to
-    NEG_INF after the product exactly as on the exact path.
+    q: (B, 1, H, D); caches: (B, S, KV, D); kv_len: valid length — a
+    traced scalar, or a (B,) per-slot vector under continuous batching.
+    amm/amm_oracle: as in ``chunked_attention``; ``amm_ste=False`` returns
+    the pure approximate forward (no straight-through composition — see
+    ``amm_dot``).
+
+    The amm products are quantized per (batch, kv-head) over the *whole*
+    cache slice on every call.  Two consequences the int-code cache path
+    (``decode_attention_codes``) exists to remove: every decode step pays
+    the K/V-side max/round/clip requantize pass, and a token's quantized
+    representation is a function of everything else in the slice — an
+    envelope-edge arrival *later* in the sequence (or garbage in a reused
+    slot past ``kv_len``, which the NEG_INF mask hides from the softmax
+    but not from the dynamic-range scale) moves the shared scale and
+    silently re-rounds every earlier token's codes.  Frozen-at-write codes
+    make each token's bits independent of later arrivals;
+    tests/test_amm_attention.py pins the drift this path allows.
     """
     b, _, h, d = q.shape
     _, s, kvh, _ = k_cache.shape
@@ -333,18 +350,191 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, amm=None,
     qf = q.astype(jnp.float32).reshape(b, kvh, groups, d) / (d ** 0.5)
     if amm is not None:
         sc = amm_dot(qf, k_cache.astype(jnp.float32).transpose(0, 2, 3, 1),
-                     amm, oracle=amm_oracle)                # (B,KV,g,S)
+                     amm, oracle=amm_oracle, ste=amm_ste)   # (B,KV,g,S)
     else:
         sc = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
-    live = jnp.arange(s)[None, None, None, :] < kv_len
+    kvl = jnp.asarray(kv_len)
+    if kvl.ndim == 1:
+        kvl = kvl[:, None, None, None]
+    live = jnp.arange(s)[None, None, None, :] < kvl
     sc = jnp.where(live, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     if amm is not None:
         out = amm_dot(p, v_cache.astype(jnp.float32).transpose(0, 2, 1, 3),
-                      amm, oracle=amm_oracle)               # (B,KV,g,Dv)
+                      amm, oracle=amm_oracle, ste=amm_ste)  # (B,KV,g,Dv)
     else:
         out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------- int-code KV cache
+def _code_write_slot(codes, scales, vf, p, *, lim: int, block: int):
+    """Single-slot quantized cache write with first-touch block scales.
+
+    codes: (S, KV, hd) int codes; scales: (nb, KV) f32, 0.0 marking a
+    never-written block (``amm_quantize`` scales are floored at 1e-12, so
+    0.0 is unreachable as a real scale); vf: (s, KV, hd) f32 rows to
+    write at position ``p``.  The first write touching a block fixes its
+    per-kv-head scale from that write's dynamic range — exactly the
+    ``amm_quantize`` scale expression, per head — and every later write
+    into the block quantizes (and clips) against the frozen scale, so a
+    token's codes never change after they are written.
+    """
+    s_new = vf.shape[0]
+    nb = scales.shape[0]
+    n_touch = -(-s_new // block) + 1     # worst-case block-misaligned span
+    b0 = p // block
+    blk_scales = []
+    for t in range(n_touch):
+        bi = b0 + t
+        rel = bi * block - p + jnp.arange(block)   # block rows -> vf rows
+        m = (rel >= 0) & (rel < s_new)
+        vals = jnp.abs(vf[jnp.clip(rel, 0, s_new - 1)]) * m[:, None, None]
+        cand = jnp.maximum(jnp.max(vals, axis=(0, 2)) * (1.0 / lim), 1e-12)
+        bic = jnp.clip(bi, 0, nb - 1)
+        old = jax.lax.dynamic_slice_in_dim(scales, bic, 1, axis=0)[0]
+        sc = jnp.where(old > 0.0, old, cand)
+        keep = m.any() & (bi < nb)
+        scales = jax.lax.dynamic_update_slice_in_dim(
+            scales, jnp.where(keep, sc, old)[None], bic, axis=0)
+        blk_scales.append(sc)
+    per_blk = jnp.stack(blk_scales)                       # (n_touch, KV)
+    tok_blk = (p + jnp.arange(s_new)) // block - b0
+    sc_tok = per_blk[tok_blk]                             # (s, KV)
+    q = jnp.clip(jnp.round(vf / sc_tok[..., None]), -lim - 1, lim)
+    codes = jax.lax.dynamic_update_slice(
+        codes, q.astype(codes.dtype), (p,) + (0,) * (codes.ndim - 1))
+    return codes, scales
+
+
+def code_cache_update(codes, scales, x, pos, *, wl: int):
+    """Write new K/V rows into an int-code cache leaf as frozen codes.
+
+    codes: (B, S, KV, hd); scales: (B, nb, KV) f32 with nb * block == S;
+    x: (B, s, KV, hd) float rows; pos: scalar or (B,) per-slot positions.
+    Returns (codes, scales) updated.  Scale candidates use the
+    ``kernels.ref.amm_quantize`` expression per (block, kv-head) — on a
+    block's first one-shot write the frozen scale is bit-identical to the
+    scale the requantize-per-call path would derive for the same values,
+    which is what makes the code-domain decode testable by
+    ``assert_array_equal`` rather than allclose.
+    """
+    lim = 2 ** (wl - 1) - 1
+    block = codes.shape[1] // scales.shape[1]
+    vf = jnp.asarray(x, jnp.float32)
+    p = jnp.asarray(pos, jnp.int32)
+    fn = partial(_code_write_slot, lim=lim, block=block)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0 if p.ndim else None))(
+        codes, scales, vf, p)
+
+
+def code_cache_dequant(codes, scales, kv_len=None):
+    """Expand an int-code cache leaf back to float32 values.
+
+    codes: (B, S, KV, hd); scales: (B, nb, KV).  Positions past ``kv_len``
+    (scalar or (B,)) are zeroed — a reused slot may hold stale codes in a
+    block whose scale is already frozen, and downstream consumers assume
+    dead cache rows are zeros.
+    """
+    b, s = codes.shape[0], codes.shape[1]
+    block = s // scales.shape[1]
+    sc = jnp.repeat(scales, block, axis=1)                # (B, S, KV)
+    out = codes.astype(jnp.float32) * sc[..., None]
+    if kv_len is not None:
+        kvl = jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+        live = jnp.arange(s)[None, :] < kvl[:, None]
+        out = jnp.where(live[:, :, None, None], out, 0.0)
+    return out
+
+
+def decode_attention_codes(q, cache, kv_len, *, amm, amm_oracle: bool = False):
+    """Single-position attention straight from the int-code KV cache.
+
+    q: (B, 1, H, D); cache: per-layer slice of the code cache —
+    ``{"k_codes", "k_scale", "v_codes", "v_scale"}`` leaves shaped as in
+    ``code_cache_update``.  kv_len: scalar or (B,) per-slot lengths.
+
+    Cached codes feed ``kernels.bbm_matmul.bbm_matmul_coded`` directly
+    (per-column K scales expanded from the per-block grid; per-K-block V
+    descale via the kblocks variant), skipping the per-call K/V-side
+    requantize of ``bbm_matmul_dynamic``.  Only ``q`` and the softmax
+    probabilities are quantized per call.  The forward value is the pure
+    approximate product (no straight-through composition — at decode time
+    no exact-valued K/V exists to compose against), i.e. the faithful
+    serving semantics of hardware with no exact multiplier.
+
+    Codes past ``kv_len`` are zeroed before the contraction: the NEG_INF
+    score mask forces their softmax weights to exactly 0.0 (hence p-codes
+    of 0), but ``bbm_type1(0, w) != 0`` for negative-row ``w``, so stale
+    V codes in a reused slot would otherwise leak into the PV product.
+    Zero codes contribute exactly nothing under both truncation kinds.
+
+    amm_oracle=True forms every product through the scalar closed forms
+    (``kernels.ref.amm_coded_ref`` / ``amm_coded_kblocks_ref``) on the
+    same schedule — bit-identical by the codes-in amm contract.
+    """
+    if amm is None or not amm.attn_active or amm.attn_lowering is None:
+        raise ValueError("int-code KV cache decode requires an active "
+                         "Booth-family bitexact amm attention lowering "
+                         "(mode='bitexact', Booth-family mul, apply_to "
+                         "'attn' or 'all')")
+    wl, vbl, kind = amm.attn_lowering
+    kc, vc = cache["k_codes"], cache["v_codes"]
+    ks, vs = cache["k_scale"], cache["v_scale"]
+    b, s, kvh, d = kc.shape
+    dv = vc.shape[-1]
+    block = s // ks.shape[1]
+    h = q.shape[2]
+    groups = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, groups, d) / (d ** 0.5)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    if amm_oracle:
+        from ..kernels.ref import amm_coded_kblocks_ref, amm_coded_ref
+        spec = amm.spec
+        qk_fn = lambda a, c, sc: amm_coded_ref(a, c, sc, spec)
+        pv_fn = lambda a, c, sc: amm_coded_kblocks_ref(a, c, sc, spec,
+                                                       block=block)
+    else:
+        from ..kernels.bbm_matmul import (bbm_matmul_coded,
+                                          bbm_matmul_coded_kblocks)
+        qk_fn = partial(bbm_matmul_coded, wl=wl, vbl=vbl, kind=kind)
+        pv_fn = partial(bbm_matmul_coded_kblocks, wl=wl, vbl=vbl, kind=kind,
+                        block=block)
+
+    def head_slice(qs, kT, ksl, vcs, vsl, n):
+        # qs (g, d) f32; kT (d, S) codes; ksl (nb,); vcs (S, dv); vsl (nb,)
+        live = jnp.arange(s) < n
+        sc = qk_fn(qs, jnp.where(live[None, :], kT, 0),
+                   jnp.repeat(ksl, block))
+        sc = jnp.where(live[None, :], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1)
+        return pv_fn(pr, jnp.where(live[:, None], vcs, 0), vsl)
+
+    fn = jax.vmap(jax.vmap(head_slice, in_axes=(0, 0, 0, 0, 0, None)),
+                  in_axes=(0, 0, 0, 0, 0, 0))
+    out = fn(qf,
+             kc.transpose(0, 2, 3, 1).astype(jnp.int32),
+             ks.transpose(0, 2, 1),
+             vc.transpose(0, 2, 1, 3).astype(jnp.int32),
+             vs.transpose(0, 2, 1),
+             kvl)                                         # (B, KV, g, Dv)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+def _cache_put(buf, new, pos):
+    """dynamic_update_slice at the decode position(s).
+
+    A scalar ``pos`` is the classic single-front write; a (B,) vector
+    (continuous batching: every slot at its own depth) vmaps the update
+    over the leading batch axis.
+    """
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        return jax.lax.dynamic_update_slice(
+            buf, new, (0, p) + (0,) * (buf.ndim - 2))
+    return jax.vmap(lambda c, n_, q_: jax.lax.dynamic_update_slice(
+        c, n_, (q_,) + (0,) * (c.ndim - 1)))(buf, new, p)
 
 
 # ------------------------------------------------------------ GQA attention
@@ -396,11 +586,35 @@ def attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    if cache is not None and s > 1 and jnp.ndim(pos) == 1:
+        raise ValueError("multi-token prefill needs a scalar position; "
+                         "per-slot position vectors are decode-only")
+    if cache is not None and "k_codes" in cache:
+        # int-code KV cache: quantize at write (frozen codes + first-touch
+        # block scales), decode straight from codes; prefill dequantizes
+        # once and rides the standard chunked schedule
+        if amm is None or amm.attn_lowering is None:
+            raise ValueError("int-code KV cache requires an active "
+                             "Booth-family bitexact amm attention lowering")
+        wl = amm.attn_lowering[0]
+        ck, sk = code_cache_update(cache["k_codes"], cache["k_scale"], k,
+                                   pos, wl=wl)
+        cv, sv = code_cache_update(cache["v_codes"], cache["v_scale"], v,
+                                   pos, wl=wl)
+        new_cache = {"k_codes": ck, "k_scale": sk,
+                     "v_codes": cv, "v_scale": sv}
+        if s == 1:
+            out = decode_attention_codes(q, new_cache, kv_len=pos + s,
+                                         amm=amm)
+        else:
+            kk = code_cache_dequant(ck, sk, kv_len=pos + s)
+            vv = code_cache_dequant(cv, sv, kv_len=pos + s)
+            out = chunked_attention(q, kk, vv, causal=causal, q_offset=pos,
+                                    kv_len=pos + s,
+                                    remat_qblock=remat_qblock, amm=amm)
+    elif cache is not None:
+        ck = _cache_put(cache["k"], k.astype(cache["k"].dtype), pos)
+        cv = _cache_put(cache["v"], v.astype(cache["v"].dtype), pos)
         new_cache = {"k": ck, "v": cv}
         if s == 1:
             out = decode_attention(q, ck, cv, kv_len=pos + s, amm=amm)
@@ -495,10 +709,29 @@ def mla_attention(p, x, cfg: ArchConfig, *, positions, cache=None, pos=None,
                         positions, cfg.rope_theta)  # (B,S,1,rope)
     lat_cat = jnp.concatenate([c_kv, k_rope[..., 0, :]], axis=-1)
 
-    if cache is not None:
-        new_lat = jax.lax.dynamic_update_slice(
-            cache["latent"], lat_cat.astype(cache["latent"].dtype),
-            (0, pos, 0))
+    if cache is not None and s > 1 and jnp.ndim(pos) == 1:
+        raise ValueError("multi-token prefill needs a scalar position; "
+                         "per-slot position vectors are decode-only")
+    if cache is not None and "lat_codes" in cache:
+        # int-code latent cache: the compressed latent is quantized at
+        # write (frozen codes, first-touch block scales) and dequantized
+        # at read — the K/V re-expansion einsums need float latents, so
+        # MLA gets the frozen-representation and memory wins of the code
+        # cache while its score/value products keep per-call scales over
+        # the dequantized values (docs/serving.md)
+        if amm is None or amm.attn_lowering is None:
+            raise ValueError("int-code KV cache requires an active "
+                             "Booth-family bitexact amm attention lowering")
+        wl = amm.attn_lowering[0]
+        lc, ls = code_cache_update(
+            cache["lat_codes"][:, :, None, :], cache["lat_scale"][..., None],
+            lat_cat[:, :, None, :], pos, wl=wl)
+        new_cache = {"lat_codes": lc[:, :, 0, :], "lat_scale": ls[..., 0]}
+        kv_len = pos + s
+        lat_all = code_cache_dequant(lc, ls, kv_len=kv_len)[:, :, 0, :]
+    elif cache is not None:
+        new_lat = _cache_put(cache["latent"],
+                             lat_cat.astype(cache["latent"].dtype), pos)
         kv_len = pos + s
         lat_all = new_lat
         new_cache = {"latent": new_lat}

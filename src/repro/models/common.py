@@ -271,7 +271,7 @@ def amm_dense(x, w, rt: AmmRuntime, key=None, planes=None):
     raise ValueError(f"unknown amm mode {cfg.mode!r}")
 
 
-def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False):
+def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False, ste: bool = True):
     """Both-operands-dynamic approximate matmul — the attention-side
     ``amm_dense``.
 
@@ -294,11 +294,16 @@ def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False):
     bit-identical by the amm contract.  ``kernels.ref.amm_attention_ref``
     uses it to oracle the attention datapath while sharing the softmax
     schedule.
+
+    ste=False skips the straight-through composition and returns the raw
+    approximate product.  ``exact + (approx - exact)`` is not bitwise
+    ``approx`` in float32, so inference paths that must match the pure
+    code-domain datapath (the int-code KV cache, whose decode never forms
+    an exact product at all) need the uncomposed value.
     """
-    exact = a @ b
     lowering = rt.attn_lowering
     if lowering is None:
-        return exact
+        return a @ b
     if oracle:
         from ..kernels.ref import amm_dot_ref
         approx = amm_dot_ref(a, b, rt.spec)
@@ -308,6 +313,9 @@ def amm_dot(a, b, rt: AmmRuntime, *, oracle: bool = False):
         for _ in range(a.ndim - 2):
             fn = jax.vmap(fn)
         approx = fn(a, b)
+    if not ste:
+        return approx
+    exact = a @ b
     return exact + jax.lax.stop_gradient(approx - exact)
 
 

@@ -314,8 +314,12 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
     amm_planes = amm_planes or {}
     h = params["embed"][tokens].astype(jnp.bfloat16)
     b, s = tokens.shape
-    positions = (jnp.arange(s)[None, :] + (pos if pos is not None else 0)
-                 ) * jnp.ones((b, 1), jnp.int32)
+    # pos: scalar decode front, or a (B,) per-slot vector (continuous
+    # batching: every resident request at its own depth)
+    off = jnp.asarray(pos if pos is not None else 0)
+    if off.ndim == 1:
+        off = off[:, None]
+    positions = (jnp.arange(s)[None, :] + off) * jnp.ones((b, 1), jnp.int32)
     aux_total = jnp.float32(0.0)
     new_caches: Dict[str, Any] = {}
     decode = mode == "decode"
@@ -354,8 +358,9 @@ def lm_apply(params, cfg: ArchConfig, rt: ModelRuntime, tokens, *,
                 cache=cache_l, pos=pos, planes=planes_l)
             return (hh, key), new_c
 
-        cache_xs = ({"k": caches["k"], "v": caches["v"]}
-                    if caches is not None else None)
+        # pass the cache dict through whole: the attention layer routes on
+        # its keys ({"k","v"} float values vs the int-code leaves)
+        cache_xs = caches if caches is not None else None
         (h, _), new_kv = jax.lax.scan(
             maybe_remat(layer), (h, rng),
             (params["layers"], cache_xs, amm_planes.get("layers")))

@@ -1,4 +1,10 @@
 """Serving layer: LM prefill/decode engine + batched FIR filterbank path."""
-from .engine import FilterbankEngine, FilterRequest, Scheduler
+from .engine import (FilterbankEngine, FilterRequest, Request, Scheduler,
+                     cache_logical_axes, cache_shardings, make_serve_fns)
+from .kv_cache import (KV_BLOCK, code_cache_logical_axes, init_code_cache,
+                       memory_report)
 
-__all__ = ["FilterbankEngine", "FilterRequest", "Scheduler"]
+__all__ = ["FilterbankEngine", "FilterRequest", "KV_BLOCK", "Request",
+           "Scheduler", "cache_logical_axes", "cache_shardings",
+           "code_cache_logical_axes", "init_code_cache", "make_serve_fns",
+           "memory_report"]

@@ -9,8 +9,19 @@ The KV caches are sharded by logical rules (batch over data, kv_heads over
 model, MLA latent over seq on model — see parallel/logical.py), and decode
 donates the cache buffers so each step updates in place.
 
-``Scheduler`` is a minimal continuous-batching loop for the serving example:
-fixed slot count, requests enter free slots, finished slots are recycled.
+``Scheduler`` serves LM requests from a fixed pool of batch slots in two
+modes.  The legacy flush mode (``continuous=False``) admits only into an
+idle batch and walks every resident in lockstep — the homogeneous-position
+simplification.  Continuous mode (``continuous=True``) admits per step
+into any free slot, prefills the prompt as one batch-1 dispatch against
+the slot's cache slice (so a long prompt never stalls resident decodes),
+decodes all residents with per-slot positions, and evicts on completion
+or failure.  With ``kv_codes=True`` the cache holds wl-bit int codes plus
+per-block scales (``serve.kv_cache``): token representations are frozen
+at write time, so each request's token stream is bitwise-identical to its
+solo run — the batch-invariance contract tests/test_serve_continuous.py
+pins (the requantize-per-call float cache cannot make it under staggered
+admission).
 
 ``FilterbankEngine`` is the batched request path for the paper's own
 workload: FIR filtering requests accumulate into channel slots and are
@@ -37,13 +48,21 @@ from ..core.guards import GuardConfig, finite_rows
 from ..models import ModelRuntime, init_cache, lm_amm_planes, lm_apply
 from ..parallel.logical import (RULES, RULES_MULTIPOD, batch_pspec,
                                 is_multipod, spec_to_pspec, tree_shardings)
+from .kv_cache import (KV_BLOCK, batch_axis_tree, code_cache_logical_axes,
+                       init_code_cache, reset_slot, slot_put, slot_take)
 
-__all__ = ["cache_logical_axes", "make_serve_fns", "Scheduler",
+__all__ = ["cache_logical_axes", "make_serve_fns", "Request", "Scheduler",
            "FilterRequest", "FilterbankEngine"]
 
 
-def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
-    """Logical axes for every cache leaf (mirrors models.init_cache)."""
+def cache_logical_axes(cfg: ArchConfig, *,
+                       kv_codes: bool = False) -> Dict[str, Any]:
+    """Logical axes for every cache leaf (mirrors models.init_cache).
+
+    kv_codes=True mirrors ``serve.kv_cache.init_code_cache`` instead.
+    """
+    if kv_codes:
+        return code_cache_logical_axes(cfg)
     if cfg.family in ("dense", "vlm", "audio"):
         kvax = ("layers", "batch", "seq", "kv_heads", "head_dim")
         c = {"k": kvax, "v": kvax}
@@ -70,20 +89,27 @@ def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
     raise ValueError(cfg.family)
 
 
-def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int,
+                    *, kv_codes: bool = False, kv_wl: int = 16,
+                    kv_block: int = KV_BLOCK):
     from ..models import init_cache
     rules = dict(RULES_MULTIPOD if is_multipod(mesh) else RULES)
     rules["seq_model"] = "model"
-    structs = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    if kv_codes:
+        structs = jax.eval_shape(lambda: init_code_cache(
+            cfg, batch, max_len, wl=kv_wl, block=kv_block))
+    else:
+        structs = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
     return jax.tree.map(
         lambda axes, st: NamedSharding(
             mesh, spec_to_pspec(axes, rules, tuple(st.shape), mesh)),
-        cache_logical_axes(cfg), structs,
+        cache_logical_axes(cfg, kv_codes=kv_codes), structs,
         is_leaf=lambda x: isinstance(x, tuple))
 
 
 def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
-                   batch: int, max_len: int, amm_planes=None):
+                   batch: int, max_len: int, amm_planes=None,
+                   kv_codes: bool = False, kv_block: int = KV_BLOCK):
     """(prefill_fn, decode_fn) jitted with explicit shardings.
 
     amm_planes: optional ``lm_amm_planes`` cache for the bitexact
@@ -94,12 +120,26 @@ def make_serve_fns(cfg: ArchConfig, rt: ModelRuntime, mesh: Mesh, *,
     wiring beyond ``rt``: the score/value products are activation x
     activation, quantized per step inside ``lm_apply`` — there is no
     weight side for a plane cache to hoist (docs/attention.md).
+
+    kv_codes=True shards the int-code cache layout instead (requires an
+    active Booth-family bitexact attention lowering on ``rt``).  ``pos``
+    accepts a scalar or a (B,) per-slot vector either way (the vector is
+    replicated — it is B int32s).  Continuous-mode prefill calls the
+    prefill fn on batch-1 slot slices, retracing once per distinct prompt
+    length (NamedShardings are shape-agnostic, so the same jitted fn
+    serves both the warmup full-batch prefill and the slot slices).
     """
     from ..models import lm_logical_axes, lm_table
+    if kv_codes and rt.amm.attn_lowering is None:
+        raise ValueError("kv_codes serving requires an active Booth-family "
+                         "bitexact amm attention lowering")
     p_rules = RULES_MULTIPOD if is_multipod(mesh) else RULES
     p_sh = tree_shardings(lm_logical_axes(cfg), mesh, p_rules,
                           shapes_tree=lm_table(cfg))
-    c_sh = cache_shardings(cfg, mesh, batch, max_len)
+    c_sh = cache_shardings(
+        cfg, mesh, batch, max_len, kv_codes=kv_codes,
+        kv_wl=(rt.amm.attn_lowering[0] if kv_codes else 16),
+        kv_block=kv_block)
     b_sh = NamedSharding(mesh, batch_pspec(mesh, batch))
     scalar = NamedSharding(mesh, P())
 
@@ -330,7 +370,38 @@ class Request:
 
 
 class Scheduler:
-    """Slot-based continuous batching over the jitted decode step.
+    """Slot-based LM batch scheduler over the jitted decode step.
+
+    Two scheduling modes:
+
+      * ``continuous=False`` (legacy flush mode): requests are admitted
+        only when every resident is at the same depth, prompts are fed one
+        token per step through the batched decode, and the whole batch
+        walks in lockstep (the homogeneous-position simplification in
+        ``step``).
+      * ``continuous=True``: per-step admission into any free slot (FIFO,
+        at most ``max_prefills_per_step`` admissions per step so a queue
+        of long prompts cannot starve resident decodes), the prompt
+        prefilled as ONE batch-1 dispatch against the slot's cache slice,
+        then per-slot-position batched decode over all residents; slots
+        are evicted and their cache slice zeroed for reuse on completion
+        or failure.  When the per-row arithmetic is row-independent —
+        exact matmuls, or attention-side amm routing whose ``amm_dot``
+        vmaps a fresh quantization scale per (slot, head) slice — a
+        request's token stream is identical whether it shares the batch
+        or runs solo, and with ``kv_codes=True`` its cache bits are too:
+        the contract tests/test_serve_continuous.py pins bitwise with
+        ``apply_to="attn"``.  MLP amm routing (apply_to "mlp"/"all") is
+        the exception: ``amm_dense`` quantizes the activation block with
+        one whole-batch scale, so batch composition can move every row's
+        code grid.
+
+    ``kv_codes=True`` stores the KV cache as wl-bit int codes plus
+    per-block f32 scales (``serve.kv_cache``; requires an active
+    Booth-family bitexact amm attention lowering on ``rt``): decode feeds
+    frozen cached codes straight into the integer datapath, skipping the
+    per-call K/V requantize, and a token's quantized representation never
+    drifts as later tokens arrive.
 
     Degradation policy (all opt-in, all off on the lean default path):
 
@@ -360,22 +431,47 @@ class Scheduler:
 
     def __init__(self, cfg: ArchConfig, rt: ModelRuntime, params,
                  batch_slots: int, max_len: int, decode_fn=None, *,
+                 prefill_fn=None, continuous: bool = False,
+                 kv_codes: bool = False, kv_block: int = KV_BLOCK,
+                 max_prefills_per_step: int = 1,
                  guard: Optional[GuardConfig] = None, max_retries: int = 0,
                  backoff: float = 0.0, backoff_cap: float = 1.0):
         self.cfg, self.rt, self.params = cfg, rt, params
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.max_len = max_len
-        self.caches = init_cache(cfg, batch_slots, max_len)
+        if kv_codes:
+            if not rt.amm.attn_active or rt.amm.attn_lowering is None:
+                raise ValueError(
+                    "kv_codes stores the cache as Broken-Booth int codes; "
+                    "it requires an active Booth-family bitexact amm "
+                    "attention lowering (AmmConfig mode='bitexact', "
+                    "Booth-family mul, apply_to 'attn'/'all')")
+            if guard is not None and guard.budget_active:
+                raise ValueError(
+                    "the guard budget audit replays the step on the exact "
+                    "datapath, which cannot read an int-code cache — use "
+                    "finite-only guards or kv_codes=False")
+            self.caches = init_code_cache(
+                cfg, batch_slots, max_len,
+                wl=rt.amm.attn_lowering[0], block=kv_block)
+        else:
+            self.caches = init_cache(cfg, batch_slots, max_len)
+        self.continuous = continuous
+        self.kv_codes = kv_codes
+        self.max_prefills_per_step = max_prefills_per_step
+        self._bax = batch_axis_tree(
+            cache_logical_axes(cfg, kv_codes=kv_codes))
         self.queue: List[Request] = []
         self.decode_fn = decode_fn
+        self.prefill_fn = prefill_fn
         self.guard = guard
         self.max_retries = max_retries
         self.backoff = backoff
         self.backoff_cap = backoff_cap
         self.stats = {"steps": 0, "decoded": 0, "completed": 0,
-                      "retries": 0, "probes": 0, "failed": 0,
-                      "guard_trips": 0, "exact_reserves": 0,
+                      "prefills": 0, "retries": 0, "probes": 0,
+                      "failed": 0, "guard_trips": 0, "exact_reserves": 0,
                       "deadline_expired": 0}
         # serving weights are fixed: hoist the bitexact datapath's weight
         # quantize + Booth digit decode out of the decode loop (None for
@@ -413,10 +509,21 @@ class Scheduler:
                 req._pending = list(req.prompt)     # tokens still to feed
                 req._steps = 0
 
+    @staticmethod
+    def _pos_arr(pos):
+        """Decode position operand: scalar (flush mode) or (B,) vector."""
+        return jnp.asarray(pos, jnp.int32)
+
     def _default_fn(self, p, t, c, q):
         logits, _, new_c = lm_apply(
             p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
-            caches=c, pos=jnp.int32(q), amm_planes=self.amm_planes)
+            caches=c, pos=self._pos_arr(q), amm_planes=self.amm_planes)
+        return logits[:, -1], new_c
+
+    def _default_prefill(self, p, t, c):
+        logits, _, new_c = lm_apply(
+            p, self.cfg, self.rt, jnp.asarray(t), mode="decode",
+            caches=c, pos=jnp.int32(0), amm_planes=self.amm_planes)
         return logits[:, -1], new_c
 
     def _fail(self, i: int, reason: str):
@@ -424,6 +531,7 @@ class Scheduler:
         s.error = reason
         s.done = True
         self.slots[i] = None
+        self.pos[i] = 0
         self.stats["failed"] += 1
 
     def _snapshot(self):
@@ -445,7 +553,7 @@ class Scheduler:
             self.stats["probes"] += 1
             try:
                 fn(self.params, jnp.asarray(t), self._snapshot(),
-                   jnp.int32(pos))
+                   self._pos_arr(pos))
             except Exception:
                 poison.append(i)
         return poison
@@ -464,7 +572,7 @@ class Scheduler:
                 else None
             try:
                 logits, self.caches = fn(self.params, jnp.asarray(toks),
-                                         self.caches, jnp.int32(pos))
+                                         self.caches, self._pos_arr(pos))
                 return logits, live
             except Exception as e:
                 last = e
@@ -491,7 +599,7 @@ class Scheduler:
         for i in poison:
             toks[i] = 0
         logits, self.caches = fn(self.params, jnp.asarray(toks),
-                                 self.caches, jnp.int32(pos))
+                                 self.caches, self._pos_arr(pos))
         return logits, live
 
     def _guard_slots(self, logits, toks, pos, pre_caches, live) -> List[int]:
@@ -506,7 +614,8 @@ class Scheduler:
             # sampled accuracy audit: the same step on the exact datapath
             exact_logits, _ = self._exact_fn()(self.params,
                                                jnp.asarray(toks),
-                                               pre_caches, jnp.int32(pos))
+                                               pre_caches,
+                                               self._pos_arr(pos))
             err = np.abs(arr.astype(np.float64)
                          - np.asarray(exact_logits, np.float64))
             ok &= np.where(np.isfinite(err), err, np.inf).mean(axis=-1) \
@@ -557,8 +666,122 @@ class Scheduler:
         req.exact = True
         req.done = True
 
+    # ------------------------------------------------- continuous batching
+    def _finish(self, i: int):
+        """Complete slot ``i``: evict and free it for the next admission."""
+        s = self.slots[i]
+        s.done = True
+        self.slots[i] = None
+        self.pos[i] = 0
+        self.stats["completed"] += 1
+
+    def _prefill_slot(self, i: int):
+        """Prefill slot ``i``'s prompt as one batch-1 dispatch.
+
+        The slot's cache slice is carved out (``slot_take``), the whole
+        prompt runs through the prefill fn at position 0, and the slice is
+        written back — resident decodes in other slots are untouched, so a
+        long prompt costs them nothing but wall-clock.  The prefill's last
+        logits are the model's prediction past the prompt: the first
+        generated token falls out of the prefill itself.  Empty prompts
+        prefill the single pad token 0, matching flush-mode semantics
+        (decoding starts from token 0).
+        """
+        req = self.slots[i]
+        toks = list(req.prompt) or [0]
+        fn = self.prefill_fn or self._default_prefill
+        sub = slot_take(self.caches, self._bax, i)
+        last = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                logits, sub = fn(self.params, jnp.asarray([toks], jnp.int32),
+                                 sub)
+                break
+            except Exception as e:
+                last = e
+                if attempt < self.max_retries:
+                    self.stats["retries"] += 1
+                    if self.backoff > 0:
+                        time.sleep(min(self.backoff * (2 ** attempt),
+                                       self.backoff_cap))
+        else:
+            self._fail(i, f"prefill failed: {last!r}")
+            return
+        self.caches = slot_put(self.caches, self._bax, sub, i)
+        self.pos[i] = len(toks)
+        self.stats["prefills"] += 1
+        self.stats["decoded"] += len(toks)
+        req._pending = []
+        req.out.append(int(np.asarray(jnp.argmax(logits, axis=-1)
+                                      ).reshape(-1)[0]))
+        if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+            self._finish(i)
+
+    def _step_continuous(self) -> int:
+        """One continuous-batching step: admit, prefill, decode residents.
+
+        Admission is FIFO into free slots, capped at
+        ``max_prefills_per_step`` per step — the prefill/decode
+        disaggregation knob: residents decode every step regardless of how
+        deep the prompt queue is.  Each admission zeroes the slot's cache
+        slice (stale codes/values and frozen block scales from the
+        previous occupant) before prefilling.  Freshly admitted slots join
+        the same step's decode — their (token, position) trajectory is
+        self-contained, so step alignment cannot change any request's
+        stream.
+        """
+        admitted = 0
+        for i in range(len(self.slots)):
+            if not self.queue or admitted >= self.max_prefills_per_step:
+                break
+            if self.slots[i] is None:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                req._steps = 0
+                req._pending = []
+                self.pos[i] = 0
+                self.caches = reset_slot(self.caches, self._bax, i)
+                self._prefill_slot(i)    # may fail or finish the slot
+                admitted += 1
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return 0
+        self.stats["steps"] += 1
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.slots[i].out[-1]
+        pos = self.pos.copy()   # (B,): dead slots write pad at 0, wiped on
+        fn = self.decode_fn or self._default_fn       # the next admission
+        audit = (self.guard is not None and self.guard.budget_active
+                 and self.stats["steps"] % self.guard.budget_every == 0)
+        pre_caches = self._snapshot() if audit else None
+        n_live = len(live)
+        logits, live = self._decode_isolated(fn, toks, pos, live)
+        if logits is None:
+            return n_live
+        for i in self._guard_slots(logits, toks, pos, pre_caches, live):
+            self._reserve_exact(self.slots[i])
+            self.slots[i] = None
+            self.pos[i] = 0
+            live = [j for j in live if j != i]
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            s = self.slots[i]
+            self.pos[i] += 1
+            s._steps += 1
+            self.stats["decoded"] += 1
+            s.out.append(int(nxt[i]))
+            if len(s.out) >= s.max_new or self.pos[i] >= self.max_len - 1:
+                self._finish(i)
+            elif s.deadline is not None and s._steps >= s.deadline:
+                self._fail(i, "deadline")
+                self.stats["deadline_expired"] += 1
+        return n_live
+
     def step(self) -> int:
         """One decode step over all live slots; returns #live requests."""
+        if self.continuous:
+            return self._step_continuous()
         self._admit()
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:

@@ -1,0 +1,179 @@
+"""Int-code KV cache: wl-bit codes + per-(layer, slot, block, kv-head)
+float32 scales.
+
+The serving-side twin of ``models.transformer.init_cache``: instead of
+bf16/f32 K/V values the cache holds the quantized codes the approximate
+datapath would derive anyway (``kernels.ref.amm_quantize`` inside
+``bbm_matmul_dynamic``), frozen at write time, plus one f32 scale per
+(layer, slot, seq-block, kv-head).  Decode feeds the codes straight into
+``kernels.bbm_matmul.bbm_matmul_coded`` (``models.attention.
+decode_attention_codes``), skipping the per-call K/V requantize — and,
+because codes never change after their write, every served token's bits
+are independent of later arrivals (the scale-drift fix pinned in
+tests/test_amm_attention.py).
+
+Layout (GQA / dense families)::
+
+    k_codes, v_codes: (layers, batch, max_len, kv_heads, head_dim)  intN
+    k_scale, v_scale: (layers, batch, n_blocks, kv_heads)           f32
+
+with ``n_blocks = max_len // block`` and intN = int8 for wl <= 8 else
+int16.  MLA caches the compressed latent: ``lat_codes`` (layers, batch,
+max_len, kv_latent + rope) + ``lat_scale`` (layers, batch, n_blocks).
+A scale of 0.0 marks a never-written block (real scales are floored at
+1e-12); the first write touching a block freezes its scale
+(``models.attention.code_cache_update``).
+
+Memory: at wl = 8 the code planes are exactly half the bf16 cache bytes
+(int8 vs 2-byte floats); the scale planes add 4 bytes per block x head —
+``4 / (block * head_dim)`` of the code bytes at default geometry, reported
+separately by ``benchmarks/serve_load.py`` rather than folded into the
+headline ratio.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+__all__ = ["KV_BLOCK", "batch_axis_tree", "cache_nbytes",
+           "code_cache_logical_axes", "code_dtype", "float_cache_nbytes",
+           "init_code_cache", "memory_report", "reset_slot", "slot_take",
+           "slot_put"]
+
+# default seq-block granularity of the frozen scales: small enough that an
+# envelope-edge token only coarsens its own block's grid, large enough
+# that scale bytes stay ~1% of code bytes at head_dim 64
+KV_BLOCK = 16
+
+
+def code_dtype(wl: int):
+    """Narrowest signed integer dtype holding wl-bit codes."""
+    if wl <= 8:
+        return jnp.int8
+    if wl <= 16:
+        return jnp.int16
+    raise ValueError(f"wl={wl} exceeds the 16-bit code envelope")
+
+
+def init_code_cache(cfg: ArchConfig, batch: int, max_len: int, *, wl: int,
+                    block: int = KV_BLOCK) -> Dict[str, Any]:
+    """Zeroed int-code decode cache for one full model (layer-stacked).
+
+    Zero codes + zero scales are the empty state by construction: zero
+    codes contribute nothing under either Broken-Booth truncation kind,
+    and 0.0 scales mark every block as never written.
+    """
+    if max_len % block:
+        raise ValueError(f"max_len={max_len} not a multiple of the scale "
+                         f"block {block}")
+    nb = max_len // block
+    dt = code_dtype(wl)
+    n = cfg.n_layers
+    if cfg.family == "moe" and cfg.use_mla:
+        lat = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return {"lat_codes": jnp.zeros((n, batch, max_len, lat), dt),
+                "lat_scale": jnp.zeros((n, batch, nb), jnp.float32)}
+    if (cfg.family in ("dense", "vlm", "audio", "moe")
+            and not cfg.is_encoder_decoder):
+        hd = cfg.resolved_head_dim
+        kv = cfg.n_kv_heads
+        return {"k_codes": jnp.zeros((n, batch, max_len, kv, hd), dt),
+                "v_codes": jnp.zeros((n, batch, max_len, kv, hd), dt),
+                "k_scale": jnp.zeros((n, batch, nb, kv), jnp.float32),
+                "v_scale": jnp.zeros((n, batch, nb, kv), jnp.float32)}
+    raise ValueError(f"int-code KV cache supports dense/GQA and MLA decode "
+                     f"caches, not family {cfg.family!r}"
+                     + (" (encoder-decoder)" if cfg.is_encoder_decoder
+                        else ""))
+
+
+def code_cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical axis names per code-cache leaf (``spec_to_pspec`` input).
+
+    The "blocks" axis has no sharding rule on purpose — scales are tiny
+    and replicate; codes shard exactly like the float cache they replace.
+    """
+    if cfg.family == "moe" and cfg.use_mla:
+        return {"lat_codes": ("layers", "batch", "seq_model", "kv_latent"),
+                "lat_scale": ("layers", "batch", "blocks")}
+    kvax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    scax = ("layers", "batch", "blocks", "kv_heads")
+    return {"k_codes": kvax, "v_codes": kvax,
+            "k_scale": scax, "v_scale": scax}
+
+
+def cache_nbytes(cache) -> int:
+    """Total bytes of a (possibly abstract) cache pytree."""
+    return sum(int(np.prod(c.shape)) * jnp.dtype(c.dtype).itemsize
+               for c in jax.tree.leaves(cache))
+
+
+def float_cache_nbytes(cfg: ArchConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> int:
+    """Bytes of the float cache the code cache replaces (no allocation)."""
+    from ..models.transformer import init_cache
+    structs = jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype=dtype))
+    return cache_nbytes(structs)
+
+
+# ------------------------------------------------------------ slot surgery
+# The continuous scheduler addresses one slot of the batch axis at a time:
+# admission resets it, prefill runs on a batch-1 slice and writes it back.
+# The batch axis sits at a different depth per leaf (hybrid ssm/conv nest
+# it under a group axis), so every helper takes a matching pytree of batch
+# axis indices (``ax_tree``), derived once from the logical axes.
+
+def batch_axis_tree(axes: Dict[str, Any]) -> Dict[str, Any]:
+    """Map a logical-axes tree to per-leaf batch-axis indices."""
+    return jax.tree.map(lambda ax: ax.index("batch"), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def slot_take(cache, ax_tree, i: int):
+    """Batch-1 slice of slot ``i`` from every leaf (shape kept)."""
+    return jax.tree.map(
+        lambda c, ax: jax.lax.slice_in_dim(c, i, i + 1, axis=ax),
+        cache, ax_tree)
+
+
+def slot_put(cache, ax_tree, sub, i: int):
+    """Write a batch-1 slice back into slot ``i`` of every leaf."""
+    return jax.tree.map(
+        lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(
+            c, s.astype(c.dtype), i, axis=ax),
+        cache, sub, ax_tree)
+
+
+def reset_slot(cache, ax_tree, i: int):
+    """Zero slot ``i`` in every leaf — codes, scales and float state alike.
+
+    Zero is the empty state for both cache kinds: zeroed float rows never
+    move a dynamic-range scale, zeroed codes contribute nothing to either
+    truncation kind, and zeroed block scales re-arm first-touch freezing.
+    """
+    def zero(c, ax):
+        idx = (slice(None),) * ax + (i,)
+        return c.at[idx].set(0)
+    return jax.tree.map(zero, cache, ax_tree)
+
+
+def memory_report(cfg: ArchConfig, batch: int, max_len: int, *, wl: int,
+                  block: int = KV_BLOCK) -> Dict[str, Any]:
+    """Code-vs-bf16 cache byte accounting (the BENCH_serve.json rows)."""
+    structs = jax.eval_shape(
+        lambda: init_code_cache(cfg, batch, max_len, wl=wl, block=block))
+    code = sum(int(np.prod(c.shape)) * jnp.dtype(c.dtype).itemsize
+               for k, c in structs.items() if k.endswith("_codes"))
+    scale = sum(int(np.prod(c.shape)) * jnp.dtype(c.dtype).itemsize
+                for k, c in structs.items() if k.endswith("_scale"))
+    bf16 = float_cache_nbytes(cfg, batch, max_len)
+    return {"code_bytes": code, "scale_bytes": scale, "bf16_bytes": bf16,
+            "ratio_codes": bf16 / code,
+            "ratio_total": bf16 / (code + scale),
+            "scale_overhead": scale / code}

@@ -75,3 +75,21 @@ def _install_hypothesis_stub() -> None:
 
 if importlib.util.find_spec("hypothesis") is None:
     _install_hypothesis_stub()
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_xla_executables():
+    """Drop jit/pjit caches after every test module.
+
+    The suite compiles thousands of XLA:CPU programs; keeping every
+    executable's JIT code pages alive for the whole run eventually drives
+    the process into native-resource exhaustion and a segfault inside
+    ``backend_compile`` (first seen compiling the Pallas FIR kernels late
+    in the run).  Tests never rely on compilation caches surviving across
+    modules — the bitwise contracts are all path-vs-path within a test —
+    so the teardown is free apart from per-module recompiles.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

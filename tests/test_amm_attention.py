@@ -25,12 +25,15 @@ from repro.configs import AmmConfig, get_arch, reduced
 from repro.core.multipliers import MulSpec
 from repro.kernels.bbm_matmul import bbm_matmul_dynamic
 from repro.kernels.ref import (AMM_BOOTH_KINDS, amm_attention_ref,
+                               amm_decode_attention_codes_ref,
                                amm_decode_attention_ref, amm_dot_ref)
 from repro.models import ModelRuntime, init_cache, lm_apply, lm_init
 from repro.models import attention as attention_mod
 from repro.models.attention import (attention, attn_table, chunked_attention,
-                                    decode_attention)
+                                    code_cache_dequant, code_cache_update,
+                                    decode_attention, decode_attention_codes)
 from repro.models.common import AmmRuntime, amm_dot, init_params
+from repro.serve.kv_cache import code_dtype, init_code_cache
 
 RNG = np.random.default_rng(29)
 
@@ -331,6 +334,214 @@ def test_encdec_cross_attention_routed(monkeypatch):
                             encoder_embeds=enc)
     assert seen and all(a is not None for a in seen)
     assert np.isfinite(np.asarray(logits)).all()
+
+
+# ------------------------------------------------ int-code KV cache oracle
+def _code_cache(k, v, wl, *, block, pos=0, s_buf=None):
+    """Code-cache leaves for one layer, written in one shot at ``pos``.
+
+    ``s_buf`` sizes the cache buffer (default: exactly the written rows);
+    a larger buffer leaves unwritten blocks at the 0.0 sentinel."""
+    b, s, kvh, d = k.shape
+    s_buf = s_buf or s
+    nb = s_buf // block
+    dt = code_dtype(wl)
+    kc = jnp.zeros((b, s_buf, kvh, d), dt)
+    vc = jnp.zeros((b, s_buf, kvh, v.shape[-1]), dt)
+    ks = jnp.zeros((b, nb, kvh), jnp.float32)
+    vs = jnp.zeros((b, nb, kvh), jnp.float32)
+    kc, ks = code_cache_update(kc, ks, k, pos, wl=wl)
+    vc, vs = code_cache_update(vc, vs, v, pos, wl=wl)
+    return {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}
+
+
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_decode_attention_codes_matches_codes_oracle(mul, wl, vbl):
+    """The codes-in datapath == the scalar closed-form codes oracle, with
+    multi-block scales, ragged per-slot kv_len (written-but-dead tails)
+    and envelope-edge rows in both K and V."""
+    rng = np.random.default_rng(17)
+    b, s, kvh, d = 2, 16, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, 1, 4, d)), jnp.float32)
+    k = rng.standard_normal((b, s, kvh, d))
+    v = rng.standard_normal((b, s, kvh, d))
+    k[0, 3] = np.abs(k).max() * 100.0      # pins its block's scale high
+    v[1, 5] = -np.abs(v).max() * 100.0
+    cache = _code_cache(jnp.asarray(k, jnp.float32),
+                        jnp.asarray(v, jnp.float32), wl, block=4)
+    kv_len = jnp.asarray([7, 12], jnp.int32)
+    got = decode_attention_codes(q, cache, kv_len, amm=_rt(mul, wl, vbl))
+    ref = amm_decode_attention_codes_ref(q, cache, kv_len,
+                                         MulSpec(mul, wl, vbl))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("mul,wl,vbl", SWEEP)
+def test_code_decode_degenerate_equals_requantize_path(mul, wl, vbl):
+    """In the degenerate geometry — one scale block covering the whole
+    slice, a single one-shot write, kv_len == written extent — the frozen
+    write-time scale is bit-identical to the scale the requantize-per-call
+    path derives per (slot, kv-head), so the two decodes agree bitwise.
+    (The requantize reference runs ste=False: ``exact + (approx - exact)``
+    is not bitwise ``approx`` in f32, and the code path never forms an
+    exact product at all.)"""
+    rng = np.random.default_rng(19)
+    b, s, kvh, d = 2, 16, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, 1, 4, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+    cache = _code_cache(k, v, wl, block=s)
+    got = decode_attention_codes(q, cache, s, amm=_rt(mul, wl, vbl))
+    ref = amm_decode_attention_ref(q, k, v, s, MulSpec(mul, wl, vbl),
+                                   ste=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_frozen_codes_immune_to_later_arrivals():
+    """The scale-drift regression pin.  Under the old whole-slice
+    requantize, any write into the cache buffer — even past ``kv_len`` —
+    moved the dynamic scale and with it every already-served token's
+    bits.  Frozen codes make token t's contribution depend only on state
+    at its own write: (a) appending envelope-edge rows after position n
+    leaves the kv_len=n decode bitwise unchanged, (b) even a late write
+    *into a live block* quantizes against the block's frozen first-touch
+    scale instead of re-gridding its neighbours, and (c) the requantize
+    path demonstrably drifts on the same scenario."""
+    mul, wl, vbl = "bbm0", 8, 5
+    rt = _rt(mul, wl, vbl)
+    rng = np.random.default_rng(23)
+    b, s, kvh, d, n = 2, 16, 2, 8, 8
+    q = jnp.asarray(rng.standard_normal((b, 1, 4, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, n, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, n, kvh, d)), jnp.float32)
+    cache = _code_cache(k, v, wl, block=4, s_buf=s)
+    before = np.asarray(decode_attention_codes(q, cache, n, amm=rt))
+
+    # (a) envelope-edge arrivals at positions >= n
+    edge = jnp.full((b, 4, kvh, d), 100.0, jnp.float32)
+    kc, ks = code_cache_update(cache["k_codes"], cache["k_scale"], edge, n,
+                               wl=wl)
+    vc, vs = code_cache_update(cache["v_codes"], cache["v_scale"], edge, n,
+                               wl=wl)
+    grown = {"k_codes": kc, "k_scale": ks, "v_codes": vc, "v_scale": vs}
+    after = np.asarray(decode_attention_codes(q, grown, n, amm=rt))
+    np.testing.assert_array_equal(before, after)
+
+    # (b) a late write into a live block cannot re-grid its neighbours:
+    # rows 0..5 freeze block 1's scale; an edge row at position 6 clips
+    # against it, and rows 0..5 keep their exact codes
+    part = _code_cache(k[:, :6], v[:, :6], wl, block=4, s_buf=s)
+    old_rows = np.asarray(part["k_codes"])[:, :6].copy()
+    kc2, ks2 = code_cache_update(part["k_codes"], part["k_scale"],
+                                 edge[:, :1], 6, wl=wl)
+    np.testing.assert_array_equal(np.asarray(kc2)[:, :6], old_rows)
+    np.testing.assert_array_equal(np.asarray(ks2), np.asarray(part["k_scale"]))
+
+    # (c) the documented drift this replaces: the requantize-per-call path
+    # rescales the whole buffer, so the same dead-tail write changes the
+    # served bits
+    kf = np.zeros((b, s, kvh, d), np.float32)
+    vf = np.zeros((b, s, kvh, d), np.float32)
+    kf[:, :n], vf[:, :n] = np.asarray(k), np.asarray(v)
+    ref_before = np.asarray(decode_attention(
+        q, jnp.asarray(kf), jnp.asarray(vf), n, amm=rt, amm_ste=False))
+    kf[:, n:n + 4] = 100.0
+    vf[:, n:n + 4] = 100.0
+    ref_after = np.asarray(decode_attention(
+        q, jnp.asarray(kf), jnp.asarray(vf), n, amm=rt, amm_ste=False))
+    assert not np.array_equal(ref_before, ref_after), \
+        "whole-slice requantize no longer drifts; update the docs"
+
+
+def test_code_cache_roundtrip_and_sentinel():
+    """Dequantize inverts quantize to within one code step; untouched
+    blocks keep the 0.0 never-written sentinel."""
+    wl = 8
+    rng = np.random.default_rng(31)
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    nb = 8 // 4
+    kc = jnp.zeros((1, 16, 2, 4), code_dtype(wl))
+    ks = jnp.zeros((1, 4, 2), jnp.float32)
+    kc, ks = code_cache_update(kc, ks, k, 0, wl=wl)
+    assert (np.asarray(ks)[:, :nb] > 0).all()
+    assert (np.asarray(ks)[:, nb:] == 0).all()          # sentinel intact
+    deq = np.asarray(code_cache_dequant(kc, ks, kv_len=8))
+    err = np.abs(deq[:, :8] - np.asarray(k))
+    step = np.asarray(ks)[:, :nb].max()
+    assert err.max() <= 0.5 * step + 1e-7
+    assert (deq[:, 8:] == 0).all()
+
+
+def test_decode_attention_codes_rejects_inactive_amm():
+    q = jnp.zeros((1, 1, 2, 4), jnp.float32)
+    cache = _code_cache(jnp.zeros((1, 8, 1, 4)), jnp.zeros((1, 8, 1, 4)),
+                        8, block=4)
+    with pytest.raises(ValueError, match="lowering"):
+        decode_attention_codes(q, cache, 4, amm=None)
+    with pytest.raises(ValueError, match="lowering"):
+        decode_attention_codes(q, cache, 4, amm=_rt("bbm0", 8, 5, "mlp"))
+
+
+def test_gqa_lm_decode_with_code_cache_tracks_float_cache():
+    """Full-model GQA decode on the int-code cache: the logits stay close
+    to the float-cache decode (the gap is bounded quantization error, not
+    drift) and the cache leaves hold frozen int codes."""
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode="bitexact", mul="bbm0", wl=8, param=5,
+                           apply_to="attn"))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 6)), jnp.int32)
+    ccache = init_code_cache(cfg, 2, 16, wl=8)
+    fcache = init_cache(cfg, 2, 16)
+    snap = None
+    for t in range(6):
+        lc, _, ccache = lm_apply(params, cfg, rt, toks[:, t:t + 1],
+                                 mode="decode", caches=ccache,
+                                 pos=jnp.int32(t))
+        lf, _, fcache = lm_apply(params, cfg, rt, toks[:, t:t + 1],
+                                 mode="decode", caches=fcache,
+                                 pos=jnp.int32(t))
+        assert float(jnp.max(jnp.abs(lc - lf))) < 0.5
+        if t == 2:
+            snap = np.asarray(ccache["k_codes"])[:, :, :3].copy()
+    assert ccache["k_codes"].dtype == jnp.int8
+    # frozen-at-write at the full-model level: rows written by step 2
+    # are bitwise untouched by steps 3..5
+    np.testing.assert_array_equal(
+        np.asarray(ccache["k_codes"])[:, :, :3], snap)
+
+
+def test_mla_lm_decode_with_code_latent_cache():
+    """MLA (deepseek) serves from an int-code latent cache: decode runs,
+    logits stay finite and near the float-latent decode, and latent codes
+    freeze at write (later steps never rewrite earlier rows)."""
+    cfg = reduced(get_arch("deepseek-v3-671b"))
+    cfg = dataclasses.replace(
+        cfg, amm=AmmConfig(mode="bitexact", mul="bbm0", wl=8, param=5,
+                           apply_to="attn"))
+    rt = ModelRuntime.build(cfg)
+    params = lm_init(cfg, jax.random.key(0))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 5)), jnp.int32)
+    ccache = init_code_cache(cfg, 2, 16, wl=8)
+    assert set(ccache) == {"lat_codes", "lat_scale"}
+    fcache = init_cache(cfg, 2, 16)
+    snap = None
+    for t in range(5):
+        lc, _, ccache = lm_apply(params, cfg, rt, toks[:, t:t + 1],
+                                 mode="decode", caches=ccache,
+                                 pos=jnp.int32(t))
+        lf, _, fcache = lm_apply(params, cfg, rt, toks[:, t:t + 1],
+                                 mode="decode", caches=fcache,
+                                 pos=jnp.int32(t))
+        assert np.isfinite(np.asarray(lc)).all()
+        assert float(jnp.max(jnp.abs(lc - lf))) < 0.5
+        if t == 2:
+            snap = np.asarray(ccache["lat_codes"])[:, :, :3].copy()
+    assert ccache["lat_codes"].dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(ccache["lat_codes"])[:, :, :3], snap)
 
 
 def test_mla_attn_routing_finite():

@@ -301,3 +301,19 @@ def test_launchers_reject_bad_amm_args_at_parse_time():
             serve_main(["--reduced"] + argv)
         with pytest.raises(SystemExit):
             train_main(["--reduced", "--steps", "1"] + argv)
+
+
+def test_serve_launcher_rejects_kv_codes_without_booth_attention():
+    """--kv-codes stores Booth attention codes: anything short of a
+    bitexact Booth-family amm with attention routed must die at parse
+    time (``launch.validate_serve_flags``), not deep in Scheduler init."""
+    from repro.launch.serve import main as serve_main
+    bad = [["--kv-codes"],                                     # amm off
+           ["--kv-codes", "--amm", "noise", "--amm-attn"],     # not bitexact
+           ["--kv-codes", "--amm", "bitexact", "--mul", "bam",
+            "--wl", "8", "--vbl", "5", "--amm-attn"],          # non-Booth
+           ["--kv-codes", "--amm", "bitexact", "--wl", "8",
+            "--vbl", "5"]]                                     # no --amm-attn
+    for argv in bad:
+        with pytest.raises(SystemExit):
+            serve_main(["--reduced"] + argv)
